@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple] = []
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time in microseconds for jitted fn(*args)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def hlo_flops(fn, *arg_shapes) -> float:
+    """Scan-corrected HLO flops (repro.launch.hlo_cost parser)."""
+    from repro.launch.hlo_cost import parse_hlo_cost
+
+    compiled = jax.jit(fn).lower(*arg_shapes).compile()
+    return parse_hlo_cost(compiled.as_text()).flops

@@ -1,0 +1,231 @@
+"""Benchmarks reproducing the paper's tables/figures (TPU-adapted units).
+
+Paper table -> bench mapping (DESIGN.md section 8):
+  Table 2     bench_table2_multiplier_widths   cost vs mantissa width
+  Tables 3-6  bench_tables3_6_vs_baselines     vs conventional multipliers
+  Table 7     bench_table7_fp_units            full FP unit per mode
+  Table 8     bench_table8_single_precision    M24 vs native f32
+  Table 9     bench_table9_accuracy            result variation per mode
+  Fig 15/16   bench_fig15_16_cost_scaling      relative cost growth
+  Fig 17      bench_fig17_precision_variation  error ladder + roundings
+  Fig 18      bench_fig18_mode_cost_reduction  cost collapse at low modes
+  section 3.1 bench_strassen                   7 vs 8 multiplications
+  Fig 7       bench_auto_mode                  auto-mode selection
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    MODE_LIMBS,
+    MODE_PASSES,
+    Mode,
+    auto_mode,
+    df32_from_f32,
+    mp_matmul,
+    mp_matmul_runtime,
+    quantize_mantissa,
+)
+from repro.core.strassen import strassen_matmul
+from benchmarks.common import emit, hlo_flops, timeit
+
+_N = 256  # benchmark matmul size (CPU container; structure not speed is the point)
+
+
+def _ab(seed=0, n=_N):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    return a, b
+
+
+def _err_vs_f64(out, a, b):
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    o = np.asarray(out, np.float64)
+    return float(np.abs(o - ref).max() / np.abs(ref).max())
+
+
+def bench_table2_multiplier_widths():
+    """Paper Table 2: binary multiplier cost vs word length.
+    TPU analogue: MXU passes + HLO flops + wall time vs limb count."""
+    a, b = _ab()
+    base = None
+    for mode in (Mode.M8, Mode.M16, Mode.M24, Mode.M32, Mode.M48):
+        if mode in (Mode.M32, Mode.M48):
+            A, B = df32_from_f32(a), df32_from_f32(b)
+        else:
+            A, B = a, b
+        fn = jax.jit(lambda x, y, m=mode: mp_matmul(x, y, m))
+        us = timeit(fn, A, B)
+        flops = hlo_flops(lambda x, y, m=mode: mp_matmul(x, y, m), A, B)
+        base = base or us
+        emit(
+            f"table2/multiplier_{8*MODE_LIMBS[mode]}bit",
+            us,
+            f"passes={MODE_PASSES[mode]};hlo_flops={flops:.3g};rel_cost={us/base:.2f}",
+        )
+
+
+def bench_tables3_6_vs_baselines():
+    """Tables 3-6: proposed multiplier vs prior multipliers.
+    TPU analogue: RMPM modes vs the conventional units available in XLA —
+    f32 dot (DEFAULT) and HIGHEST-precision dot."""
+    a, b = _ab(1)
+    cases = {
+        "baseline_f32_dot": jax.jit(lambda x, y: jnp.dot(x, y)),
+        "baseline_f32_highest": jax.jit(
+            lambda x, y: jnp.dot(x, y, precision=jax.lax.Precision.HIGHEST)
+        ),
+        "proposed_M8": jax.jit(lambda x, y: mp_matmul(x, y, Mode.M8)),
+        "proposed_M16": jax.jit(lambda x, y: mp_matmul(x, y, Mode.M16)),
+        "proposed_M24": jax.jit(lambda x, y: mp_matmul(x, y, Mode.M24)),
+    }
+    for name, fn in cases.items():
+        us = timeit(fn, a, b)
+        err = _err_vs_f64(fn(a, b), a, b)
+        emit(f"tables3_6/{name}", us, f"max_rel_err={err:.2e}")
+
+
+def bench_table7_fp_units():
+    """Table 7: the full floating-point unit at each precision mode
+    (delay grows sub-linearly with precision — the paper's headline)."""
+    a, b = _ab(2)
+    rows = []
+    for mode in (Mode.M8, Mode.M16, Mode.M24):
+        fn = jax.jit(lambda x, y, m=mode: mp_matmul(x, y, m))
+        us = timeit(fn, a, b)
+        err = _err_vs_f64(fn(a, b), a, b)
+        rows.append((mode, us, err))
+        emit(f"table7/fp_unit_{mode.name}", us, f"max_rel_err={err:.2e}")
+    # sub-linearity check: cost ratio between modes < passes ratio
+    r_cost = rows[-1][1] / rows[0][1]
+    r_passes = MODE_PASSES[Mode.M24] / MODE_PASSES[Mode.M8]
+    emit("table7/sublinearity", 0.0, f"cost_ratio={r_cost:.2f};passes_ratio={r_passes:.1f}")
+
+
+def bench_table8_single_precision():
+    """Table 8: proposed single-precision unit vs reference f32 units."""
+    a, b = _ab(3)
+    ours = jax.jit(lambda x, y: mp_matmul(x, y, Mode.M24))
+    ref = jax.jit(lambda x, y: jnp.dot(x, y))
+    emit("table8/proposed_M24", timeit(ours, a, b), f"max_rel_err={_err_vs_f64(ours(a,b),a,b):.2e}")
+    emit("table8/reference_f32", timeit(ref, a, b), f"max_rel_err={_err_vs_f64(ref(a,b),a,b):.2e}")
+
+
+def bench_table9_accuracy():
+    """Table 9: multiply the paper's own operand (1.605759317 x 2^7, i.e.
+    0x4069B130AE804118) by itself in every mode; report the mantissa
+    variation vs the exact double product."""
+    from repro.core.precision import DoubleF32
+
+    x64 = np.frombuffer(bytes.fromhex("4069b130ae804118"), ">f8")[0].astype(np.float64)
+    exact = x64 * x64
+    a = jnp.full((8, 8), np.float32(x64))
+    # full 52-bit operand as a DoubleF32 (hi/lo split done in numpy f64)
+    hi = np.float32(x64)
+    lo = np.float32(x64 - np.float64(hi))
+    A = DoubleF32(jnp.full((8, 8), hi), jnp.full((8, 8), lo))
+    for mode in (Mode.M8, Mode.M16, Mode.M24, Mode.M32, Mode.M48):
+        if mode in (Mode.M32, Mode.M48):
+            out = mp_matmul(A, A, mode)
+            val = float(np.asarray(out.hi, np.float64)[0, 0] + np.asarray(out.lo, np.float64)[0, 0]) / 8
+        else:
+            val = float(np.asarray(mp_matmul(a, a, mode), np.float64)[0, 0]) / 8
+        variation = abs(val - exact) / exact
+        paper = {Mode.M8: 2.52915e-4, Mode.M16: 1.58495e-4, Mode.M24: 8.7e-8,
+                 Mode.M32: 0.0, Mode.M48: 0.0}[mode]
+        emit(f"table9/mode_{mode.name}", 0.0,
+             f"mantissa_variation={variation:.3e};paper_reported={paper:.3e}")
+
+
+def bench_fig15_16_cost_scaling():
+    """Figs 15/16: relative change in cost when width doubles —
+    the paper's claim: growth is sub-quadratic thanks to Karatsuba."""
+    a, b = _ab(4)
+    prev = None
+    for mode in (Mode.M8, Mode.M16, Mode.M24, Mode.M48):
+        A, B = (df32_from_f32(a), df32_from_f32(b)) if mode == Mode.M48 else (a, b)
+        us = timeit(jax.jit(lambda x, y, m=mode: mp_matmul(x, y, m)), A, B)
+        bits = 8 * MODE_LIMBS[mode]
+        if prev is not None:
+            emit(f"fig15/{prev[0]}to{bits}bit", us,
+                 f"cost_ratio={us/prev[1]:.2f};naive_quadratic_ratio={(bits/prev[0])**2:.2f}")
+        prev = (bits, us)
+
+
+def bench_fig17_precision_variation():
+    """Fig 17 + section 3.3.4: error ladder across modes and rounding schemes."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    for keep, label in ((7, "8bit"), (15, "16bit"), (22, "23bit")):
+        errs = {}
+        for r in ("trunc", "rne", "grte"):
+            q = quantize_mantissa(x, keep, r)
+            errs[r] = float(jnp.max(jnp.abs((q - x) / x)))
+        emit(f"fig17/round_{label}", 0.0,
+             f"trunc={errs['trunc']:.2e};rne={errs['rne']:.2e};grte={errs['grte']:.2e}")
+
+
+def bench_fig18_mode_cost_reduction():
+    """Fig 18: cost collapse when a low-precision mode is selected at run
+    time — HLO flops of one transformer block per policy mode vs the
+    conventional double(-ish) unit (M48)."""
+    d = 512
+    x = jax.ShapeDtypeStruct((64, d), jnp.float32)
+    w = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    # conventional always-max-precision unit = M48 pass count (21 passes)
+    m24 = hlo_flops(lambda a, b: mp_matmul(a, b, Mode.M24), x, w)
+    base = m24 / 6 * 21
+    for mode in (Mode.M8, Mode.M16, Mode.M24):
+        fl = hlo_flops(lambda a, b, m=mode: mp_matmul(a, b, m), x, w)
+        emit(f"fig18/{mode.name}", 0.0,
+             f"hlo_flops={fl:.3g};reduction_vs_M48={100*(1-fl/base):.1f}%")
+
+
+def bench_strassen():
+    """Section 3.1: Strassen needs 7 multiplications per 2x2 block level."""
+    n = 512
+    a, b = _ab(6, n)
+    flops_c = hlo_flops(lambda x, y: jnp.dot(x, y), a, b)
+    t_c = timeit(jax.jit(lambda x, y: jnp.dot(x, y)), a, b)
+    emit("strassen/classical", t_c, f"hlo_flops={flops_c:.4g};leaf_mults=1")
+    for depth in (1, 2):
+        fn = jax.jit(lambda x, y, d=depth: strassen_matmul(x, y, depth=d, align=64))
+        fl = hlo_flops(lambda x, y, d=depth: strassen_matmul(x, y, depth=d, align=64), a, b)
+        err = _err_vs_f64(fn(a, b), a, b)
+        emit(f"strassen/depth{depth}", timeit(fn, a, b),
+             f"hlo_flops={fl:.4g};flops_ratio={fl/flops_c:.3f};leaf_mults={7**depth};max_rel_err={err:.1e}")
+
+
+def bench_auto_mode():
+    """Fig 7: auto-mode picks the cheapest adequate precision at run time."""
+    rng = np.random.default_rng(7)
+    a_int = jnp.asarray(rng.integers(0, 100, (_N, _N)).astype(np.float32))
+    a_f = jnp.asarray(rng.standard_normal((_N, _N)).astype(np.float32))
+    m_int = int(auto_mode(a_int, a_int))
+    m_f = int(auto_mode(a_f, a_f))
+    fn = jax.jit(mp_matmul_runtime)
+    us_int = timeit(fn, a_int, a_int, jnp.int32(0))
+    us_f = timeit(fn, a_f, a_f, jnp.int32(0))
+    exact = np.array_equal(
+        np.asarray(fn(a_int, a_int, jnp.int32(0)), np.float64),
+        np.asarray(a_int, np.float64) @ np.asarray(a_int, np.float64),
+    )
+    emit("auto_mode/int_inputs", us_int, f"selected=M{8*m_int};exact_int_product={exact}")
+    emit("auto_mode/float_inputs", us_f, f"selected=M{8*m_f}")
+
+
+ALL = [
+    bench_table2_multiplier_widths,
+    bench_tables3_6_vs_baselines,
+    bench_table7_fp_units,
+    bench_table8_single_precision,
+    bench_table9_accuracy,
+    bench_fig15_16_cost_scaling,
+    bench_fig17_precision_variation,
+    bench_fig18_mode_cost_reduction,
+    bench_strassen,
+    bench_auto_mode,
+]

@@ -1,0 +1,29 @@
+"""Benchmark driver: one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table9     # substring filter
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import paper_tables
+
+
+def main() -> None:
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    for fn in paper_tables.ALL:
+        if pattern and pattern not in fn.__name__:
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness running; report the failure
+            print(f"{fn.__name__},-1,FAILED:{type(e).__name__}:{e}", flush=True)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched serving: continuous-batching decode with a KV cache, runtime
+precision policy, and int8 KV-cache quantization.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import PRESETS
+from repro.models import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def build(kv_dtype: str):
+    cfg = get_config("qwen1.5-0.5b")
+    cfg = dataclasses.replace(
+        cfg, n_layers=2, d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
+        vocab=512, remat=False, attn_chunk=64, kv_cache_dtype=kv_dtype,
+    ).with_policy(PRESETS["native_f32"])
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def main():
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 512, rng.integers(4, 12)).astype(np.int32) for _ in range(6)]
+    reqs = [Request(prompt=p, max_new=12, rid=i) for i, p in enumerate(prompts)]
+
+    outs = {}
+    for kv_dtype in ("bfloat16", "int8"):
+        model, params = build(kv_dtype)
+        eng = ServeEngine(model, params, batch_slots=8, max_len=64)
+        outs[kv_dtype] = eng.generate_batch(reqs)
+        print(f"kv_cache={kv_dtype}:")
+        for rid, toks in outs[kv_dtype].items():
+            print(f"  req {rid}: {toks}")
+
+    agree = sum(
+        outs["bfloat16"][r.rid] == outs["int8"][r.rid] for r in reqs
+    )
+    print(f"int8-KV agrees with bf16-KV on {agree}/{len(reqs)} requests "
+          f"(greedy decode; small divergence is the quantization trade)")
+
+
+if __name__ == "__main__":
+    main()

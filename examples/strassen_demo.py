@@ -1,0 +1,30 @@
+"""The paper's own configuration (section 3): a 4x4 matrix multiplier built from
+2x2-PE Strassen recursion with the run-time-reconfigurable multiplier inside.
+
+    PYTHONPATH=src python examples/strassen_demo.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import paper_4x4
+from repro.core import Mode, mp_matmul
+from repro.core.strassen import leaf_products, strassen_matmul
+
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.standard_normal((4, 4)).astype(np.float32))
+B = jnp.asarray(rng.standard_normal((4, 4)).astype(np.float32))
+exact = np.asarray(A, np.float64) @ np.asarray(B, np.float64)
+
+print(f"paper config: {paper_4x4.MATRIX_SIZE}x{paper_4x4.MATRIX_SIZE} matrix, "
+      f"{paper_4x4.PE_SIZE}x{paper_4x4.PE_SIZE} PEs, Strassen depth {paper_4x4.STRASSEN_DEPTH}")
+print(f"leaf products: {leaf_products(paper_4x4.STRASSEN_DEPTH)} (classical would use 8)")
+
+for mode in (Mode.M8, Mode.M16, Mode.M24):
+    leaf = lambda x, y, m=mode: mp_matmul(x, y, m)
+    out = strassen_matmul(A, B, depth=paper_4x4.STRASSEN_DEPTH, leaf_fn=leaf, align=2)
+    err = np.abs(np.asarray(out, np.float64) - exact).max()
+    print(f"  PE mode {mode.name}: max abs err = {err:.2e}")
+
+# the parallel-PE claim (section 3): all 7 sub-products are data-independent ->
+# on TPU they lower to independent dots XLA schedules in parallel
+print("All 7 PE products are independent block dots (XLA schedules them concurrently)")

@@ -1,0 +1,9 @@
+"""The paper's own configuration: a 4x4 matrix multiplier built from 2x2
+processing elements (Strassen external, RMPM multiplier internal) —
+configs for examples/strassen_demo.py and benchmarks."""
+from repro.core.policy import PAPER_BASELINE
+
+PE_SIZE = 2        # processing element: 2x2 matmul
+MATRIX_SIZE = 4    # top level: 4x4
+STRASSEN_DEPTH = 1  # one level of 7-product recursion
+POLICY = PAPER_BASELINE

@@ -1,0 +1,39 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+C1 rmpm      — run-time-reconfigurable multi-precision matmul engine
+C2 precision — mode ladder + auto-mode operand probe
+C3 rounding  — G&(R|T|E) / RNE / truncate mantissa quantization
+C4 strassen  — top-down Strassen block matmul
+"""
+from repro.core.precision import (  # noqa: F401
+    DF32_MODES,
+    F32_MODES,
+    MODE_BITS,
+    MODE_LIMBS,
+    MODE_PASSES,
+    DoubleF32,
+    Mode,
+    PrecisionSpec,
+    auto_mode,
+    classify,
+    df32_from_f32,
+    df32_from_f64,
+    mode_mismatch_error,
+)
+from repro.core.policy import (  # noqa: F401
+    FAST_M8,
+    MIXED,
+    NATIVE_F32,
+    PAPER_BASELINE,
+    PRESETS,
+    PrecisionPolicy,
+)
+from repro.core.rmpm import (  # noqa: F401
+    mp_einsum,
+    mp_linear,
+    mp_matmul,
+    mp_matmul_runtime,
+    mp_matmul_runtime_df32,
+)
+from repro.core.rounding import quantize_mantissa  # noqa: F401
+from repro.core.strassen import strassen_matmul  # noqa: F401

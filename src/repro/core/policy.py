@@ -1,0 +1,67 @@
+"""Per-layer/per-op precision policies.
+
+The paper's mode-select bits are set "by the application program" (section 3.3.1).
+In this framework the application program is the model config: a
+``PrecisionPolicy`` maps op classes (qkv / attn_qk / attn_av / out / mlp_up /
+mlp_down / moe_expert / logits / embed / ssm_in / ...) to RMPM modes, either
+statically (compiled per mode — used by dry-run/roofline) or as a runtime
+scalar (one executable, ``lax.switch`` — used by serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.precision import Mode
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    default: Mode = Mode.M24
+    overrides: tuple[tuple[str, Mode], ...] = ()
+    rounding: str = "rne"
+    impl: str = "xla"  # 'xla' | 'pallas' | 'native'
+
+    def mode_for(self, op: str) -> Mode:
+        for name, mode in self.overrides:
+            if name == op:
+                return mode
+        return self.default
+
+    def with_impl(self, impl: str) -> "PrecisionPolicy":
+        return dataclasses.replace(self, impl=impl)
+
+    def describe(self) -> str:
+        ov = ", ".join(f"{n}={m.name}" for n, m in self.overrides)
+        return f"default={self.default.name}" + (f" [{ov}]" if ov else "")
+
+
+# The paper-faithful baseline: every multiply at single-precision fidelity
+# (mode 4 / 23-bit mantissa ~ M24 = 3 limbs, 6 MXU passes).  This is what a
+# "conventional" non-reconfigurable FP unit would do, and what XLA's
+# HIGHEST-precision f32 matmul does on TPU.
+PAPER_BASELINE = PrecisionPolicy(default=Mode.M24)
+
+# Reduced-precision run-time mode: everything in one MXU pass (bf16), the
+# paper's mode 2.  Accuracy-critical ops stay higher per the mixed policy.
+FAST_M8 = PrecisionPolicy(default=Mode.M8)
+
+# Beyond-paper mixed policy (the optimized configuration in section Perf):
+# bulk GEMMs at one pass, numerically sensitive contractions at 2-3 limbs.
+MIXED = PrecisionPolicy(
+    default=Mode.M8,
+    overrides=(
+        ("attn_qk", Mode.M16),
+        ("logits", Mode.M16),
+        ("router", Mode.M24),
+    ),
+)
+
+# Fast CPU execution path for end-to-end examples (numerically ~= M24).
+NATIVE_F32 = PrecisionPolicy(default=Mode.M24, impl="native")
+
+PRESETS: dict[str, PrecisionPolicy] = {
+    "paper_baseline": PAPER_BASELINE,
+    "fast_m8": FAST_M8,
+    "mixed": MIXED,
+    "native_f32": NATIVE_F32,
+}

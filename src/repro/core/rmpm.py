@@ -1,0 +1,261 @@
+"""RMPM — the Run-time-reconfigurable Multi-Precision Matmul engine (C1+C2).
+
+This is the paper's reconfigurable floating-point multiplier, lifted from a
+single FP multiply to the TPU-native unit of work: a matmul on the MXU.
+
+  * ``mp_matmul(a, b, mode)``         — static-mode k-limb matmul
+  * ``mp_matmul_runtime(a, b, mode)`` — runtime mode scalar, one compiled
+        executable, ``lax.switch`` selects the active branch (the paper's
+        "unused multipliers are shut down"; no recompile <-> no re-synthesis)
+  * ``mp_einsum(eq, a, b, mode)``     — same engine for arbitrary
+        contractions (attention scores, attention-value, SSD blocks, ...)
+
+Implementation paths:
+  * ``impl='xla'``    — limb algebra expressed as jnp dots; XLA lowers each
+        pass to an MXU matmul (this is what the dry-run/roofline measures).
+  * ``impl='pallas'`` — fused limb-extraction + multi-pass matmul kernel
+        (kernels/limb_matmul); TPU target, validated in interpret mode.
+  * ``impl='native'`` — plain f32 jnp.dot reference execution (numerically
+        ~= M24); used for fast CPU end-to-end examples.
+
+High modes (M32/M48) accumulate their partial products with Neumaier
+compensation over K-chunks, because a plain f32 accumulator would cap the
+achievable precision near 2^-24 for large K (see DESIGN.md section 2 / tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import limb as limb_lib
+from repro.core.precision import (
+    DF32_MODES,
+    F32_MODES,
+    MODE_LIMBS,
+    DoubleF32,
+    Mode,
+    auto_mode,
+)
+
+Array = jax.Array
+
+
+def _two_sum(a: Array, b: Array) -> tuple[Array, Array]:
+    """Knuth TwoSum: s + e == a + b exactly (s = fl(a+b))."""
+    s = a + b
+    bb = s - a
+    e = (a - (s - bb)) + (b - bb)
+    return s, e
+
+
+def _neumaier_sum(parts: Sequence[Array]) -> Array:
+    s = parts[0]
+    comp = jnp.zeros_like(s)
+    for p in parts[1:]:
+        s, e = _two_sum(s, p)
+        comp = comp + e
+    return s + comp
+
+
+# ---------------------------------------------------------------------------
+# Core limb contraction
+# ---------------------------------------------------------------------------
+
+
+def _limb_einsum(
+    eq: str,
+    a,
+    b,
+    k: int,
+    rounding: str = "rne",
+    compensated: bool | None = None,
+) -> Array:
+    """k-limb multi-pass contraction: sum over Karatsuba terms (i+j < k) of
+    einsum(a_i, b_j), bf16 x bf16 -> f32 per pass."""
+    if compensated is None:
+        compensated = k >= 4
+    a_limbs = limb_lib.split_limbs(a, k, rounding)
+    b_limbs = limb_lib.split_limbs(b, k, rounding)
+    terms = limb_lib.limb_product_terms(k)
+    parts = [
+        jnp.einsum(eq, a_limbs[i], b_limbs[j], preferred_element_type=jnp.float32)
+        for (i, j) in terms
+    ]
+    if compensated:
+        return _neumaier_sum(parts)
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = acc + p
+    return acc
+
+
+def _limb_matmul_dd(a, b, k: int, rounding: str = "rne") -> Array:
+    """High-precision (M32/M48) 2D matmul with double-f32 (Neumaier)
+    accumulation.  a: (M, K), b: (K, N)  ->  (M, N) f32.
+
+    bf16 x bf16 elementwise products are EXACT in f32 (16-bit significands),
+    so the only error source is summation; a TwoSum cascade over the K axis
+    and the Karatsuba terms keeps it near u^2 ~ 2^-48 instead of the ~2^-24
+    cap of a monolithic f32 dot.  O(K) sequential — this is the
+    validation-grade path; the TPU Pallas kernel carries (sum, comp) f32
+    accumulator pairs in VMEM across K-tiles for the same effect per tile.
+    """
+    a_limbs = limb_lib.split_limbs(a, k, rounding)  # (k, M, K)
+    b_limbs = limb_lib.split_limbs(b, k, rounding)  # (k, K, N)
+    terms = limb_lib.limb_product_terms(k)
+    m, kdim = a_limbs.shape[1], a_limbs.shape[2]
+    n = b_limbs.shape[2]
+    a_f = a_limbs.astype(jnp.float32)
+    b_f = b_limbs.astype(jnp.float32)
+
+    def step(carry, x):
+        s, comp = carry
+        for i, j in terms:
+            p = a_f[i, :, x][:, None] * b_f[j, x, :][None, :]  # exact in f32
+            s, e = _two_sum(s, p)
+            comp = comp + e
+        return (s, comp), None
+
+    zeros = jnp.zeros((m, n), jnp.float32)
+    (s, comp), _ = jax.lax.scan(step, (zeros, zeros), jnp.arange(kdim))
+    # The result carries > 24 significand bits, so it is returned as a
+    # DoubleF32 pair (the paper likewise outputs the full double-width word).
+    hi, lo = _two_sum(s, comp)
+    return DoubleF32(hi, lo)
+
+
+def _check_mode_operands(mode: Mode, a, b) -> None:
+    if mode in DF32_MODES:
+        return  # DoubleF32 preferred but plain f32 accepted (lo = 0)
+    if isinstance(a, DoubleF32) or isinstance(b, DoubleF32):
+        raise ValueError(
+            f"mode {mode.name} is an f32 mode; DoubleF32 operands need M32/M48"
+        )
+
+
+def mp_einsum(
+    eq: str,
+    a,
+    b,
+    mode: Mode = Mode.M24,
+    *,
+    rounding: str = "rne",
+    impl: str = "xla",
+) -> Array:
+    """Multi-precision einsum through the RMPM engine (two-operand)."""
+    mode = Mode(mode)
+    if impl == "native" or mode == Mode.AUTO:
+        if mode == Mode.AUTO:
+            raise ValueError("AUTO requires mp_matmul_runtime / mp_einsum_runtime")
+        av = a.hi + a.lo if isinstance(a, DoubleF32) else a
+        bv = b.hi + b.lo if isinstance(b, DoubleF32) else b
+        return jnp.einsum(
+            eq,
+            av.astype(jnp.float32),
+            bv.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    _check_mode_operands(mode, a, b)
+    return _limb_einsum(eq, a, b, MODE_LIMBS[mode], rounding)
+
+
+def mp_matmul(
+    a,
+    b,
+    mode: Mode = Mode.M24,
+    *,
+    rounding: str = "rne",
+    impl: str = "xla",
+    strassen_depth: int = 0,
+) -> Array:
+    """Multi-precision matmul: a (..., K) @ b (K, N) -> (..., N) f32.
+
+    ``strassen_depth > 0`` routes through the paper's top-down Strassen block
+    recursion (C4) with this engine at the leaves.
+    """
+    mode = Mode(mode)
+    if strassen_depth > 0:
+        from repro.core import strassen as strassen_lib  # local import (cycle)
+
+        leaf = functools.partial(mp_matmul, mode=mode, rounding=rounding, impl=impl)
+        return strassen_lib.strassen_matmul(a, b, depth=strassen_depth, leaf_fn=leaf)
+    if impl == "pallas":
+        from repro.kernels.limb_matmul import ops as limb_ops
+
+        return limb_ops.limb_matmul(a, b, MODE_LIMBS[mode], rounding=rounding)
+    shape_a = a.hi.shape if isinstance(a, DoubleF32) else a.shape
+    if len(shape_a) == 2:
+        if mode in DF32_MODES and impl == "xla":
+            return _limb_matmul_dd(a, b, MODE_LIMBS[mode], rounding)
+        return mp_einsum("mk,kn->mn", a, b, mode, rounding=rounding, impl=impl)
+    # Rank-generic einsum — do NOT flatten leading dims: a (batch, seq, d)
+    # reshape would merge two differently-sharded dims and GSPMD falls back
+    # to replicating the matmul over 'model' (measured 16x HLO-flop waste on
+    # sequence-parallel archs; EXPERIMENTS.md section Perf cell A).
+    lead = "uvwxyz"[: len(shape_a) - 1]
+    eq = f"{lead}k,kn->{lead}n"
+    return mp_einsum(eq, a, b, mode, rounding=rounding, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Runtime reconfiguration (C1's mode-select bits + C2's auto-mode)
+# ---------------------------------------------------------------------------
+
+
+def mp_matmul_runtime(
+    a: Array,
+    b: Array,
+    mode: Array | int | Mode = Mode.AUTO,
+    *,
+    rounding: str = "rne",
+    auto_tol: float = 0.0,
+) -> Array:
+    """Runtime-reconfigurable matmul over the f32 mode set {M8, M16, M24}.
+
+    ``mode`` may be a traced int32 scalar (the paper's mode-select bits) — the
+    executable contains all three branches but only the selected one runs.
+    ``Mode.AUTO`` (0) probes operands and picks the cheapest adequate mode.
+    """
+    if isinstance(mode, Mode) and mode != Mode.AUTO:
+        return mp_matmul(a, b, mode, rounding=rounding)
+    mode_scalar = jnp.asarray(mode, jnp.int32)
+    selected = jnp.where(
+        mode_scalar == int(Mode.AUTO),
+        auto_mode(a, b, tol=auto_tol, max_mode=Mode.M24),
+        mode_scalar,
+    )
+    branches = [
+        functools.partial(mp_matmul, mode=m, rounding=rounding) for m in F32_MODES
+    ]
+    return jax.lax.switch(jnp.clip(selected - 1, 0, len(branches) - 1), branches, a, b)
+
+
+def mp_matmul_runtime_df32(
+    a: DoubleF32,
+    b: DoubleF32,
+    mode: Array | int | Mode,
+    *,
+    rounding: str = "rne",
+) -> Array:
+    """Runtime switch over the extended-precision mode set {M32, M48}."""
+    mode_scalar = jnp.asarray(mode, jnp.int32)
+    branches = [
+        functools.partial(mp_matmul, mode=m, rounding=rounding) for m in DF32_MODES
+    ]
+    idx = jnp.clip(mode_scalar - int(Mode.M32), 0, len(branches) - 1)
+    return jax.lax.switch(idx, branches, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Model-facing convenience
+# ---------------------------------------------------------------------------
+
+
+def mp_linear(x: Array, w: Array, b: Array | None, mode: Mode, **kw) -> Array:
+    out = mp_matmul(x, w, mode, **kw)
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out

@@ -1,0 +1,85 @@
+"""Bit-exact mantissa truncation + rounding (paper C3, section 3.3.4).
+
+The paper truncates operands to the selected mantissa width *before*
+multiplication and rounds with a 4-bit scheme:
+
+    G = guard  (MSB of the dropped field)
+    R = round  (next bit)
+    E = extra  (next bit — the paper's addition over classic G/R/T)
+    T = sticky (OR of all remaining dropped bits)
+
+    rnd = G & (R | T | E)                                   (paper Eq. 10)
+
+and adds ``rnd`` to the LSB of the kept mantissa (round-up scheme).  We
+implement it bit-exactly on the int32 view of f32 (and the int64 view of f64
+when x64 is enabled), alongside round-to-nearest-even and plain truncation for
+comparison (benchmarks/table9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ROUNDINGS = ("trunc", "rne", "grte")
+
+
+def _quantize_bits(xi, mant_bits: int, keep: int, rounding: str, int_dtype, uint_dtype):
+    """Quantize the significand of a float viewed as an integer.
+
+    xi: integer view; mant_bits: explicit mantissa field width of the format
+    (23 for f32, 52 for f64); keep: number of explicit mantissa bits to keep.
+    """
+    drop = mant_bits - keep
+    if drop <= 0:
+        return xi
+    one = jnp.asarray(1, uint_dtype)
+    xu = xi.astype(uint_dtype)
+    lsb_unit = one << drop  # one ULP of the kept format
+    kept = xu & ~(lsb_unit - one)
+
+    if rounding == "trunc":
+        out = kept
+    elif rounding == "grte":
+        g = (xu >> (drop - 1)) & one
+        r = (xu >> (drop - 2)) & one if drop >= 2 else jnp.zeros_like(xu)
+        e = (xu >> (drop - 3)) & one if drop >= 3 else jnp.zeros_like(xu)
+        if drop >= 4:
+            t = (xu & ((one << (drop - 3)) - one)) != 0
+            t = t.astype(uint_dtype)
+        else:
+            t = jnp.zeros_like(xu)
+        rnd = g & (r | t | e)  # paper Eq. (10)
+        out = kept + rnd * lsb_unit
+    elif rounding == "rne":
+        g = (xu >> (drop - 1)) & one
+        rest = (xu & ((one << (drop - 1)) - one)) != 0
+        lsb = (xu >> drop) & one
+        round_up = (g == one) & (rest | (lsb == one))
+        out = kept + round_up.astype(uint_dtype) * lsb_unit
+    else:
+        raise ValueError(f"rounding must be one of {_ROUNDINGS}, got {rounding!r}")
+    # Rounding may carry into the exponent field; that is the correct IEEE
+    # behaviour (mantissa overflow renormalizes), so plain integer add works.
+    return out.astype(int_dtype)
+
+
+def quantize_mantissa(x: jax.Array, keep_bits: int, rounding: str = "grte") -> jax.Array:
+    """Reduce ``x`` to ``keep_bits`` explicit mantissa bits (sign/exponent
+    unchanged) using the selected rounding scheme.  Pure-jnp oracle for the
+    Pallas kernel in ``kernels/quantize_mantissa``.
+    """
+    if rounding not in _ROUNDINGS:
+        raise ValueError(f"rounding must be one of {_ROUNDINGS}, got {rounding!r}")
+    if x.dtype == jnp.float32:
+        xi = jax.lax.bitcast_convert_type(x, jnp.int32)
+        qi = _quantize_bits(xi, 23, min(keep_bits, 23), rounding, jnp.int32, jnp.uint32)
+        out = jax.lax.bitcast_convert_type(qi, jnp.float32)
+    elif x.dtype == jnp.float64:
+        xi = jax.lax.bitcast_convert_type(x, jnp.int64)
+        qi = _quantize_bits(xi, 52, min(keep_bits, 52), rounding, jnp.int64, jnp.uint64)
+        out = jax.lax.bitcast_convert_type(qi, jnp.float64)
+    else:
+        raise TypeError(f"quantize_mantissa supports f32/f64, got {x.dtype}")
+    # NaN/Inf have all-ones exponents; mantissa rounding could corrupt them
+    # (Inf -> NaN or NaN payload change).  Pass specials through untouched.
+    return jnp.where(jnp.isfinite(x), out, x)

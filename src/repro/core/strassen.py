@@ -1,0 +1,112 @@
+"""Strassen top-down block matmul (paper C4, section 3.1).
+
+The paper's recommended *top-down* organisation — Strassen as the external
+algorithm over 2x2 block partitions, the classical multiply as the internal
+(leaf) algorithm — maps onto TPU as: recursive 2x2 block split at trace time,
+7 block products per level (vs 8 classical), leaves dispatched to the RMPM
+limb engine / MXU.  Each level scales matmul FLOPs by 7/8 in exchange for
+O(n^2) extra adds and working set, i.e. it trades the compute roofline term
+against the memory term.
+
+Note: the paper's Eq. (3) contains a typo (p11 appears twice); we use the
+standard Strassen combination with p22 = S1 - S2 + S3 + S6.
+
+The alpha/beta streaming variant (paper Eq. 8-9) is an FPGA pipelining device;
+XLA's scheduler provides the equivalent overlap, so the standard recursion is
+kept (DESIGN.md section 2/C4).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+LeafFn = Callable[[Array, Array], Array]
+
+
+def _default_leaf(a: Array, b: Array) -> Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: Array, rows: int, cols: int) -> Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _strassen(a: Array, b: Array, depth: int, leaf_fn: LeafFn) -> Array:
+    if depth == 0:
+        return leaf_fn(a, b)
+    m, k = a.shape
+    _, n = b.shape
+    mh, kh, nh = m // 2, k // 2, n // 2
+    a11, a12 = a[:mh, :kh], a[:mh, kh:]
+    a21, a22 = a[mh:, :kh], a[mh:, kh:]
+    b11, b12 = b[:kh, :nh], b[:kh, nh:]
+    b21, b22 = b[kh:, :nh], b[kh:, nh:]
+
+    rec = lambda x, y: _strassen(x, y, depth - 1, leaf_fn)
+    # Paper Eq. (2): the seven partial products S1..S7.
+    s1 = rec(a11 + a22, b11 + b22)
+    s2 = rec(a21 + a22, b11)
+    s3 = rec(a11, b12 - b22)
+    s4 = rec(a22, b21 - b11)
+    s5 = rec(a11 + a12, b22)
+    s6 = rec(a21 - a11, b11 + b12)
+    s7 = rec(a12 - a22, b21 + b22)
+    # Paper Eq. (3) (typo-corrected).
+    c11 = s1 + s4 - s5 + s7
+    c12 = s3 + s5
+    c21 = s2 + s4
+    c22 = s1 - s2 + s3 + s6
+    return jnp.concatenate(
+        [jnp.concatenate([c11, c12], axis=1), jnp.concatenate([c21, c22], axis=1)],
+        axis=0,
+    )
+
+
+def strassen_matmul(
+    a: Array,
+    b: Array,
+    depth: int = 1,
+    leaf_fn: LeafFn | None = None,
+    align: int = 128,
+) -> Array:
+    """Strassen block matmul a (M, K) @ b (K, N) with ``depth`` recursion
+    levels (7^depth leaf products).  Operands are zero-padded so every leaf is
+    a multiple of ``align`` (MXU tile) — padding preserves the product.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError("strassen_matmul is 2D; flatten leading dims first")
+    if depth < 0:
+        raise ValueError("depth must be >= 0")
+    leaf_fn = leaf_fn or _default_leaf
+    if depth == 0:
+        return leaf_fn(a, b)
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+    unit = align * (2**depth)
+    mp_, kp, np_ = _ceil_to(m, unit), _ceil_to(k, unit), _ceil_to(n, unit)
+    ap = _pad_to(a.astype(jnp.float32), mp_, kp)
+    bp = _pad_to(b.astype(jnp.float32), kp, np_)
+    out = _strassen(ap, bp, depth, leaf_fn)
+    return out[:m, :n]
+
+
+def leaf_products(depth: int) -> int:
+    """Number of leaf matmuls: 7^depth (classical recursion would be 8^depth)."""
+    return 7**depth
+
+
+def flops_ratio(depth: int) -> float:
+    """Matmul-FLOP ratio vs classical: (7/8)^depth."""
+    return (7.0 / 8.0) ** depth

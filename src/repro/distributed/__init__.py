@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    BATCH_AXES,
+    constrain,
+    param_shardings,
+    input_shardings,
+)

@@ -1,0 +1,109 @@
+"""int8 error-feedback gradient compression for the cross-pod reduction.
+
+The paper's thesis — spend precision only where it buys accuracy — applied to
+the collective roofline term: cross-pod gradient all-reduce is the longest
+link (DCN vs ICI), so gradients cross it as block-scaled int8 with an
+error-feedback residual carried to the next step (1-bit-Adam-family result:
+EF keeps SGD/Adam convergence).  4x fewer bytes on the 'pod' axis, measured
+in EXPERIMENTS.md section Perf.
+
+Implementation: shard_map over the pod axis; psum of the dequantized local
+int8 blocks (the quantization bounds what each pod *contributes*; XLA moves
+int8 + f32 scales between pods when it materializes the reduction).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+_BLOCK = 512
+
+
+def _quantize_block(x: Array) -> tuple[Array, Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-20
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_block(q: Array, scale: Array, shape, size) -> Array:
+    return (q.astype(jnp.float32) * scale).reshape(-1)[:size].reshape(shape)
+
+
+def compress_decompress(x: Array) -> tuple[Array, Array]:
+    """Round-trip int8 quantization; returns (approx, residual)."""
+    q, s = _quantize_block(x)
+    approx = _dequantize_block(q, s, x.shape, x.size)
+    return approx, x - approx
+
+
+def ef_reduce_leaf(g: Array, r: Array) -> tuple[Array, Array]:
+    """Error-feedback int8 mean-reduction of one leaf over the 'pod' axis.
+    MUST run inside a shard_map that is manual over 'pod' — this is what
+    keeps the f32 all-reduce OUT of the backward pass (the collective moves
+    int8 + per-block scales: 4x fewer bytes on the cross-pod link)."""
+    corrected = g + r
+    q, s = _quantize_block(corrected)
+    approx = _dequantize_block(q, s, g.shape, g.size)
+    new_r = corrected - approx  # error feedback
+    q_all = jax.lax.all_gather(q, "pod")
+    s_all = jax.lax.all_gather(s, "pod")
+    n_pods = jax.lax.psum(1, "pod")
+    summed = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+    reduced = summed.reshape(g.shape) / n_pods
+    return reduced, new_r
+
+
+def ef_reduce_tree(grads: Any, residuals: Any) -> tuple[Any, Any]:
+    pairs = jax.tree.map(ef_reduce_leaf, grads, residuals)
+    red = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return red, res
+
+
+def compressed_psum_pod(grads: Any, residuals: Any, mesh) -> tuple[Any, Any]:
+    """Error-feedback compressed mean-reduction over the 'pod' mesh axis.
+
+    grads/residuals: pytrees replicated-over-pod in their sharded layout.
+    Returns (reduced_grads, new_residuals).
+    """
+    if "pod" not in mesh.axis_names:
+        return grads, residuals
+
+    def local(g, r):
+        corrected = g + r
+        q, s = _quantize_block(corrected)
+        approx = _dequantize_block(q, s, g.shape, g.size)
+        new_r = corrected - approx  # error feedback
+        # The collective moves int8 + per-block f32 scales (4x fewer bytes
+        # than an f32 all-reduce) — this is what the roofline parser sees.
+        q_all = jax.lax.all_gather(q, "pod")  # (n_pods, blocks, BLOCK) int8
+        s_all = jax.lax.all_gather(s, "pod")
+        n_pods = jax.lax.psum(1, "pod")
+        summed = jnp.sum(q_all.astype(jnp.float32) * s_all, axis=0)
+        reduced = summed.reshape(-1)[: g.size].reshape(g.shape) / n_pods
+        return reduced, new_r
+
+    def fn(g_tree, r_tree):
+        pairs = jax.tree.map(local, g_tree, r_tree)
+        red = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+        res = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+        return red, res
+
+    spec = jax.tree.map(lambda _: P(), grads)
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=(spec, spec),
+        axis_names={"pod"},  # manual over pod only; data/model stay GSPMD
+        check_vma=False,
+    )(grads, residuals)

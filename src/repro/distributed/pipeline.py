@@ -1,0 +1,86 @@
+"""GPipe-style pipeline parallelism over a mesh axis (DESIGN section 4, optional).
+
+``pipeline_apply`` runs a homogeneous layer-stack across S pipeline stages:
+stage i holds the i-th slice of the stacked parameters; microbatches stream
+through the classic (M + S - 1)-step schedule with boundary activations moved
+by ``ppermute``.  Implemented with shard_map manual over the stage axis.
+AD flows through (ppermute transposes to the reverse permutation), so
+jax.grad over the pipeline works for training.  Current limitation: the
+shard_map must be manual over its whole mesh (partial-manual out_specs over a
+mixed pod/data mesh trips an XLA normalization issue — the b/433785288 class);
+use a dedicated stage axis / sub-mesh.  Validated exact (fwd + grad) in
+tests/test_distributed.py.
+
+Bubble fraction = (S-1)/(M+S-1) — choose M >> S.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+def pipeline_apply(
+    stage_fn: Callable,
+    stage_params,
+    x_microbatches: Array,  # (M, microbatch, ...)
+    mesh,
+    axis: str = "pod",
+):
+    """Run ``stage_fn(params_i, x)`` across the ``axis`` mesh dimension as a
+    pipeline.  ``stage_params`` leaves are stacked (S, ...).  Returns the
+    (M, microbatch, ...) outputs, replicated over the stage axis."""
+    n_stages = mesh.shape[axis]
+    m = x_microbatches.shape[0]
+
+    def run(params, xs):
+        sid = jax.lax.axis_index(axis)
+        last = n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        p_local = jax.tree.map(lambda p: p[0], params)  # (1, ...) -> (...)
+
+        outs0 = jnp.zeros_like(xs)
+        inflight0 = jnp.zeros_like(xs[0])
+
+        def step(carry, t):
+            outs, inflight = carry
+            # stage 0 ingests microbatch t (clamped; masked below), others
+            # consume the activation handed over by the previous stage
+            x_in = jnp.where(
+                sid == 0, xs[jnp.clip(t, 0, m - 1)], inflight
+            )
+            y = stage_fn(p_local, x_in)
+            # the emitting microbatch index at the LAST stage is t-(S-1)
+            idx = t - last
+            take = (idx >= 0) & (sid == last)
+            outs = jnp.where(
+                take, outs.at[jnp.clip(idx, 0, m - 1)].set(y), outs
+            )
+            inflight = jax.lax.ppermute(y, axis, perm)
+            return (outs, inflight), None
+
+        (outs, _), _ = jax.lax.scan(
+            step, (outs0, inflight0), jnp.arange(m + n_stages - 1)
+        )
+        # replicate the last stage's outputs across the axis
+        outs = jax.lax.psum(
+            jnp.where(sid == last, outs, jnp.zeros_like(outs)), axis
+        )
+        return outs
+
+    return jax.shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        axis_names={axis},
+        check_vma=False,
+    )(stage_params, x_microbatches)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

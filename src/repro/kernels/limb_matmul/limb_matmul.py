@@ -1,0 +1,196 @@
+"""Pallas TPU kernel: fused limb-extraction + k-limb multi-pass matmul.
+
+This is the MXU-native form of the paper's reconfigurable multiplier (C1).
+The naive XLA formulation materializes k bf16 limb tensors per operand in HBM
+(k x the read traffic); this kernel reads the f32 operands ONCE per block,
+extracts the limbs in VMEM, and runs the k(k+1)/2 retained Karatsuba passes
+on the MXU while the block is resident — the memory-roofline optimization
+recorded in EXPERIMENTS.md section Perf.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the f32 accumulator tile stays
+resident in VMEM across the contraction (revisited output block pattern).
+
+VMEM budget per step (f32 words): bm*bk (A) + bk*bn (B) + bm*bn (acc)
+ + bf16 limb copies k*(bm*bk + bk*bn)/2.  With bm=bn=128, bk=512, k=3:
+ 128*512*4 + 512*128*4 + 128*128*4 + 3*(128*512+512*128)*2 = ~1.3 MiB << 16 MiB VMEM.
+
+High modes (k >= 4) additionally carry a Neumaier compensation tile so the
+accumulation is double-f32 across K-tiles (see core.rmpm._limb_matmul_dd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.limb import limb_product_terms
+
+
+def _extract_limbs(x, k: int):
+    """Split an f32 tile into k bf16 limbs (in VMEM / registers)."""
+    limbs = []
+    r = x
+    for _ in range(k):
+        li = r.astype(jnp.bfloat16)
+        limbs.append(li)
+        r = r - li.astype(jnp.float32)
+    return limbs
+
+
+def _limb_matmul_kernel(a_ref, b_ref, out_ref, acc_ref, *, k: int, n_k_tiles: int):
+    """One (bm, bn) output tile x one bk slab of the contraction."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_tile = a_ref[...]  # (bm, bk) f32 — read once; limbs live in VMEM only
+    b_tile = b_ref[...]  # (bk, bn) f32
+    a_limbs = _extract_limbs(a_tile, k)
+    b_limbs = _extract_limbs(b_tile, k)
+
+    acc = acc_ref[...]
+    # High-order (small-magnitude) terms first minimizes accumulation error.
+    for i, j in limb_product_terms(k):
+        acc = acc + jax.lax.dot_general(
+            a_limbs[i],
+            b_limbs[j],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == n_k_tiles - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+def _limb_matmul_dd_kernel(
+    a_ref, b_ref, hi_ref, lo_ref, acc_ref, comp_ref, *, k: int, n_k_tiles: int
+):
+    """High-precision variant: double-f32 accumulation across K-tiles.
+
+    Two f32 VMEM accumulators (sum, compensation) are carried across the K
+    grid; each retained Karatsuba pass is folded in with a TwoSum, removing
+    the cross-tile accumulation error.  NOTE the honest hardware limit: each
+    MXU pass itself accumulates bk products in a plain f32 tree (the paper's
+    FPGA builds arbitrary-width accumulators; the MXU cannot), so the
+    effective precision of this kernel saturates near 26-28 bits.  Full
+    M32/M48 fidelity uses core.rmpm._limb_matmul_dd (exact per-element
+    products + Neumaier scan) — the validation-grade path.  Recorded as
+    changed-assumption #8 in DESIGN.md.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        comp_ref[...] = jnp.zeros_like(comp_ref)
+
+    a_limbs = _extract_limbs(a_ref[...], k)
+    b_limbs = _extract_limbs(b_ref[...], k)
+    s = acc_ref[...]
+    comp = comp_ref[...]
+    for i, j in limb_product_terms(k):
+        p = jax.lax.dot_general(
+            a_limbs[i],
+            b_limbs[j],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        t = s + p
+        bb = t - s
+        comp = comp + ((s - (t - bb)) + (p - bb))  # Knuth TwoSum error term
+        s = t
+    acc_ref[...] = s
+    comp_ref[...] = comp
+
+    @pl.when(pl.program_id(2) == n_k_tiles - 1)
+    def _done():
+        s_f = acc_ref[...]
+        c_f = comp_ref[...]
+        t = s_f + c_f
+        bb = t - s_f
+        hi_ref[...] = t
+        lo_ref[...] = (s_f - (t - bb)) + (c_f - bb)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret")
+)
+def limb_matmul_dd_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    k: int = 4,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """High-precision k-limb matmul returning a (hi, lo) DoubleF32 pair."""
+    m, kdim = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
+    n_k_tiles = kdim // bk
+    return pl.pallas_call(
+        functools.partial(_limb_matmul_dd_kernel, k=k, n_k_tiles=n_k_tiles),
+        grid=(m // bm, n // bn, n_k_tiles),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret")
+)
+def limb_matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    k: int = 3,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """a (M, K) f32 @ b (K, N) f32 -> (M, N) f32 at k-limb precision.
+
+    Shapes must be multiples of the block sizes (ops.py pads).
+    """
+    m, kdim = a.shape
+    _, n = b.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (a.shape, b.shape, bm, bn, bk)
+    n_k_tiles = kdim // bk
+    grid = (m // bm, n // bn, n_k_tiles)
+    return pl.pallas_call(
+        functools.partial(_limb_matmul_kernel, k=k, n_k_tiles=n_k_tiles),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,50 @@
+"""Jitted public wrapper for the limb_matmul Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.limb_matmul.limb_matmul import limb_matmul_pallas
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret", "rounding"))
+def limb_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    k: int = 3,
+    *,
+    rounding: str = "rne",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Multi-precision matmul a (..., K) @ b (K, N) via the fused Pallas
+    kernel; pads to block multiples and strips the padding.
+
+    ``interpret=True`` executes the kernel body on CPU (this container);
+    on TPU pass interpret=False.  Only RNE limb extraction is fused; the
+    paper's GRTE rounding runs through kernels/quantize_mantissa first.
+    """
+    if rounding != "rne":
+        from repro.kernels.quantize_mantissa.ops import quantize_mantissa_op
+
+        a = quantize_mantissa_op(a, 8 * k - 1, rounding, interpret=interpret)
+        b = quantize_mantissa_op(b, 8 * k - 1, rounding, interpret=interpret)
+    lead = a.shape[:-1]
+    kdim = a.shape[-1]
+    n = b.shape[-1]
+    a2 = a.reshape(-1, kdim).astype(jnp.float32)
+    m = a2.shape[0]
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, kdim)
+    mp_, kp, np_ = _ceil_to(m, bm_), _ceil_to(kdim, bk_), _ceil_to(n, bn_)
+    a2 = jnp.pad(a2, ((0, mp_ - m), (0, kp - kdim)))
+    b2 = jnp.pad(b.astype(jnp.float32), ((0, kp - kdim), (0, np_ - n)))
+    out = limb_matmul_pallas(a2, b2, k, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)

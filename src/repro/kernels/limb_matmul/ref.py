@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the limb_matmul Pallas kernel.
+
+Deliberately written from scratch (NOT importing core.rmpm) so kernel tests
+check against an independent formulation of the same arithmetic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def limb_matmul_ref(a: jax.Array, b: jax.Array, k: int) -> jax.Array:
+    """a (M, K) f32 @ b (K, N) f32 at k bf16-limb precision -> (M, N) f32."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def limbs(x):
+        out, r = [], x
+        for _ in range(k):
+            li = r.astype(jnp.bfloat16)
+            out.append(li)
+            r = r - li.astype(jnp.float32)
+        return out
+
+    al, bl = limbs(a), limbs(b)
+    terms = sorted(
+        [(i, j) for i in range(k) for j in range(k) if i + j < k],
+        key=lambda ij: -(ij[0] + ij[1]),
+    )
+    acc = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    for i, j in terms:
+        acc = acc + jnp.dot(al[i], bl[j], preferred_element_type=jnp.float32)
+    return acc

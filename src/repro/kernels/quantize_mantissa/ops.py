@@ -1,0 +1,37 @@
+"""Jitted public wrapper for the quantize_mantissa Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize_mantissa.quantize_mantissa import quantize_mantissa_pallas
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("keep", "rounding", "interpret"))
+def quantize_mantissa_op(
+    x: jax.Array,
+    keep: int,
+    rounding: str = "grte",
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantize the mantissa of an arbitrary-shape f32 array to ``keep``
+    explicit bits with the selected rounding (trunc | rne | grte)."""
+    if keep >= 23:
+        return x
+    shape = x.shape
+    flat = x.reshape(1, -1) if x.ndim < 2 else x.reshape(-1, shape[-1])
+    m, n = flat.shape
+    bm, bn = min(256, m), min(256, n)
+    mp_, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    padded = jnp.pad(flat, ((0, mp_ - m), (0, np_ - n)))
+    out = quantize_mantissa_pallas(
+        padded, keep, rounding, block=(bm, bn), interpret=interpret
+    )
+    return out[:m, :n].reshape(shape)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: mantissa truncation + rounding (paper C3).
+
+Bit-exact implementation of the paper's rounding scheme on the int32 view of
+f32 data:
+
+    G = first dropped bit, R = second, E = third, T = OR of the rest
+    rnd = G & (R | T | E)        -> added to the kept-mantissa LSB  (Eq. 10)
+
+plus round-to-nearest-even and plain truncation for the Table 9 comparison.
+Elementwise over 2D blocks — integer ALU work on the VPU, one pass over HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_MANT = 23  # explicit mantissa bits of f32
+
+
+def _quantize_block(x, keep: int, rounding: str):
+    drop = _MANT - keep
+    xi = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    one = jnp.uint32(1)
+    lsb_unit = one << drop
+    kept = xi & ~(lsb_unit - one)
+    if rounding == "trunc":
+        qi = kept
+    elif rounding == "grte":
+        g = (xi >> (drop - 1)) & one
+        r = (xi >> (drop - 2)) & one if drop >= 2 else jnp.zeros_like(xi)
+        e = (xi >> (drop - 3)) & one if drop >= 3 else jnp.zeros_like(xi)
+        if drop >= 4:
+            t = ((xi & ((one << (drop - 3)) - one)) != 0).astype(jnp.uint32)
+        else:
+            t = jnp.zeros_like(xi)
+        qi = kept + (g & (r | t | e)) * lsb_unit
+    elif rounding == "rne":
+        g = (xi >> (drop - 1)) & one
+        rest = ((xi & ((one << (drop - 1)) - one)) != 0).astype(jnp.uint32)
+        lsb = (xi >> drop) & one
+        qi = kept + (g & (rest | lsb)) * lsb_unit
+    else:
+        raise ValueError(rounding)
+    q = jax.lax.bitcast_convert_type(qi, jnp.float32)
+    return jnp.where(jnp.isfinite(x), q, x)
+
+
+def _kernel(x_ref, o_ref, *, keep: int, rounding: str):
+    o_ref[...] = _quantize_block(x_ref[...], keep, rounding)
+
+
+@functools.partial(jax.jit, static_argnames=("keep", "rounding", "block", "interpret"))
+def quantize_mantissa_pallas(
+    x: jax.Array,
+    keep: int,
+    rounding: str = "grte",
+    *,
+    block: tuple[int, int] = (256, 256),
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, N) f32, M/N multiples of block dims (ops.py pads)."""
+    if keep >= _MANT:
+        return x
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, keep=keep, rounding=rounding),
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x)

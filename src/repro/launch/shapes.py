@@ -1,0 +1,287 @@
+"""The assigned (architecture x input-shape) cells and their step builders.
+
+Shapes (LM family, per assignment):
+    train_4k      seq=4096    global_batch=256   (training step)
+    prefill_32k   seq=32768   global_batch=32    (inference prefill)
+    decode_32k    seq=32768   global_batch=128   (one token, 32k KV cache)
+    long_500k     seq=524288  global_batch=1     (long-context decode —
+                  sub-quadratic archs only: ssm / hybrid; full-attention
+                  archs are N/A by definition, see DESIGN.md)
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins — no
+device allocation anywhere in the dry-run path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (
+    decode_state_shardings,
+    input_shardings,
+    param_shardings,
+    replicated,
+)
+from repro.models import build_model
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+from repro.train.step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# gradient-accumulation steps per arch for train_4k (activation-memory lever)
+ACCUM = {
+    "kimi-k2-1t-a32b": 16,
+    "command-r-plus-104b": 8,
+    "phi3.5-moe-42b-a6.6b": 8,
+    "recurrentgemma-9b": 4,
+    "qwen1.5-4b": 4,
+    "phi3-mini-3.8b": 4,
+    "mamba2-2.7b": 2,
+    "whisper-medium": 2,
+    "qwen1.5-0.5b": 2,
+    "internvl2-1b": 2,
+}
+
+
+def cell_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: no sub-quadratic path (DESIGN.md)"
+    return True, ""
+
+
+def _arch_tweaks(cfg: ArchConfig, shape: ShapeSpec) -> ArchConfig:
+    """Per-cell execution knobs (documented levers, not architecture changes)."""
+    changes: dict = {}
+    if cfg.name == "kimi-k2-1t-a32b":
+        # int8 moments: 1T-param AdamW does not fit 512 chips otherwise
+        changes["moe_group_size"] = 512
+    if shape.kind != "train" and shape.seq >= 32768:
+        changes["attn_chunk"] = 2048
+    return dataclasses.replace(cfg, **changes) if changes else cfg
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStructs for the *data* inputs of the step."""
+    b, s = shape.batch, shape.seq
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.family == "vlm":
+            st = s - cfg.n_vision_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "pixel_embeds": jax.ShapeDtypeStruct((b, cfg.n_vision_tokens, cfg.d_model), f32),
+                "labels": jax.ShapeDtypeStruct((b, st), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.family == "vlm":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s - cfg.n_vision_tokens), i32),
+                "pixel_embeds": jax.ShapeDtypeStruct((b, cfg.n_vision_tokens, cfg.d_model), f32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a seq-length cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def _opt_shape(params_shape, ocfg):
+    return jax.eval_shape(lambda p: adamw.init_state(p, ocfg), params_shape)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *, grad_compression: bool = False) -> dict:
+    """Returns dict(fn, args=(shapes...), in_shardings, donate) ready to
+    jit/lower — the (architecture x shape x mesh) dry-run unit."""
+    cfg = _arch_tweaks(cfg, shape)
+    model = build_model(cfg)
+    b, s = shape.batch, shape.seq
+    data = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        quant_moments = cfg.name == "kimi-k2-1t-a32b"
+        tcfg = TrainConfig(
+            optimizer=adamw.AdamWConfig(quantize_moments=quant_moments),
+            accum_steps=ACCUM.get(cfg.name, 1),
+            grad_compression=grad_compression,
+        )
+        step = make_train_step(model, tcfg, mesh)
+        params_shape = jax.eval_shape(model.init, jax.random.key(0))
+        state_shape = {
+            "params": params_shape,
+            "opt": _opt_shape(params_shape, tcfg.optimizer),
+        }
+        if grad_compression:
+            state_shape["residual"] = params_shape
+        p_shard = param_shardings(params_shape, cfg, mesh)
+        if quant_moments:
+            # quantized moments block along the LAST dim: (..., D/B, B).
+            # Inherit the param's leading-dim sharding (experts stay EP-
+            # sharded); the two trailing block dims replicate.
+            from repro.distributed.sharding import _fit_spec
+
+            def _qm(param_leaf, sharding):
+                spec = tuple(sharding.spec)
+                lead = spec[: max(len(param_leaf.shape) - 1, 0)]
+                q_spec = jax.sharding.PartitionSpec(*(lead + (None, None)))
+                return (
+                    jax.NamedSharding(mesh, q_spec),
+                    jax.NamedSharding(mesh, q_spec),
+                )
+
+            m_shard = jax.tree.map(_qm, params_shape, p_shard)
+        else:
+            m_shard = p_shard
+        state_shard = {
+            "params": p_shard,
+            "opt": {"step": replicated(mesh), "m": m_shard, "v": m_shard},
+        }
+        if grad_compression:
+            state_shard["residual"] = p_shard
+        return {
+            "fn": step,
+            "args": (state_shape, data),
+            "in_shardings": (state_shard, input_shardings(data, mesh)),
+            "out_shardings": (state_shard, None),
+            "donate": (0,),
+            "model": model,
+            "cfg": cfg,
+            "tcfg": tcfg,
+        }
+
+    # serving cells
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    p_shard = param_shardings(params_shape, cfg, mesh)
+    cache_len = s if shape.kind == "prefill" else s
+    enc_len = s if cfg.family == "encdec" else 0
+    state_shape = jax.eval_shape(
+        functools.partial(model.init_decode_state, b, cache_len)
+    )
+    if cfg.family == "encdec":
+        state_shape = dataclasses.replace(
+            state_shape,
+            enc_out=jax.ShapeDtypeStruct((b, enc_len, cfg.d_model), jnp.float32),
+        )
+    s_shard = decode_state_shardings(state_shape, cfg, mesh)
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+
+            def fn(params, frames, tokens, state):
+                state = model.prefill_encoder(params, frames, state)
+                return model.decode_step(params, tokens, state)
+
+            args = (params_shape, data["frames"], data["tokens"], state_shape)
+            insh = (p_shard, input_shardings(data["frames"], mesh),
+                    input_shardings(data["tokens"], mesh), s_shard)
+            donate = (3,)
+        elif cfg.family == "vlm":
+
+            def fn(params, tokens, pixel_embeds, state):
+                return model.decode_step(params, tokens, state, pixel_embeds=pixel_embeds)
+
+            args = (params_shape, data["tokens"], data["pixel_embeds"], state_shape)
+            insh = (p_shard, input_shardings(data["tokens"], mesh),
+                    input_shardings(data["pixel_embeds"], mesh), s_shard)
+            donate = (3,)
+        else:
+
+            def fn(params, tokens, state):
+                return model.decode_step(params, tokens, state)
+
+            args = (params_shape, data["tokens"], state_shape)
+            insh = (p_shard, input_shardings(data["tokens"], mesh), s_shard)
+            donate = (2,)
+    else:  # decode: cache pre-filled to seq length
+
+        def fn(params, tokens, state):
+            return model.decode_step(params, tokens, state)
+
+        args = (params_shape, data["tokens"], state_shape)
+        insh = (p_shard, input_shardings(data["tokens"], mesh), s_shard)
+        donate = (2,)
+
+    return {
+        "fn": fn,
+        "args": args,
+        "in_shardings": insh,
+        "out_shardings": (None, s_shard),
+        "donate": donate,
+        "model": model,
+        "cfg": cfg,
+    }
+
+
+def count_params(params_shape, cfg: ArchConfig) -> dict:
+    """Total and active (MoE) parameter counts from shapes (no allocation)."""
+    total = 0
+    active = 0
+    embed = 0
+
+    def visit(path, leaf):
+        nonlocal total, active, embed
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        is_embed = "embed" in path or "unembed" in path
+        if is_embed:
+            embed += n
+        if cfg.moe_experts and any(s in path for s in ("moe.gate", "moe.up", "moe.down")):
+            active += n * cfg.moe_top_k // cfg.moe_experts
+        else:
+            active += n
+
+    from repro.distributed.sharding import _tree_paths
+
+    for p, leaf in _tree_paths(params_shape):
+        visit(p, leaf)
+    return {"total": total, "active": active, "embed": embed}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec, params_shape) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active non-embed."""
+    counts = count_params(params_shape, cfg)
+    n = counts["active"] - counts["embed"]
+    # unembed/logits matmul is real compute: add vocab head explicitly
+    n_head = cfg.vocab * cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * (n + n_head) * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * (n + n_head) * tokens
+    tokens = shape.batch  # one step
+    return 2.0 * (n + n_head) * tokens

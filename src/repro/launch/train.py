@@ -1,0 +1,118 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b --smoke \
+        --steps 50 --policy native_f32 --ckpt-dir /tmp/repro_ckpt
+
+``--smoke`` shrinks the config to CPU scale (the full configs are for real
+meshes; this container has one device).  On a real cluster the same driver
+runs the full config: the mesh comes from ``--mesh data,model`` sizes and
+jax.distributed initialization happens outside (standard JAX multi-host).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.policy import PRESETS
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.distributed.sharding import input_shardings, param_shardings, replicated
+from repro.models import build_model
+from repro.optim import adamw
+from repro.train.loop import LoopConfig, resume_or_init, train_loop
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced CPU-scale config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--policy", default="native_f32", choices=tuple(PRESETS))
+    ap.add_argument("--mesh", default="", help="e.g. '4,2' for (data=4, model=2)")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    cfg = cfg.with_policy(PRESETS[args.policy])
+    if cfg.family in ("encdec", "vlm"):
+        raise SystemExit("use examples/ for multimodal drivers on CPU")
+    model = build_model(cfg)
+    tcfg = TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                                    total_steps=args.steps),
+        accum_steps=args.accum,
+    )
+
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = ("data", "model")[: len(shape)]
+        mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+    step_fn = make_train_step(model, tcfg, mesh)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch, seed=0)
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    if mesh is not None:
+        params_shape = jax.eval_shape(model.init, jax.random.key(0))
+        p_shard = param_shardings(params_shape, cfg, mesh)
+        state_shard = {
+            "params": p_shard,
+            "opt": {"step": replicated(mesh), "m": p_shard, "v": p_shard},
+        }
+        with jax.set_mesh(mesh):
+            step = jax.jit(step_fn, in_shardings=(state_shard, None), donate_argnums=0)
+            start, state = resume_or_init(
+                mgr, lambda: init_train_state(model, jax.random.key(0), tcfg), state_shard
+            )
+    else:
+        step = jax.jit(step_fn, donate_argnums=0)
+        start, state = resume_or_init(
+            mgr, lambda: init_train_state(model, jax.random.key(0), tcfg)
+        )
+    if start:
+        data.skip_to(start)
+        print(f"resumed at step {start}")
+
+    n = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"{args.arch}: {n/1e6:.1f}M params | policy {cfg.policy.describe()} | mesh {args.mesh or 'single'}")
+
+    pf = Prefetcher(data)
+    try:
+        ctx = jax.set_mesh(mesh) if mesh is not None else _null()
+        with ctx:
+            state, hist = train_loop(
+                step, state, pf,
+                LoopConfig(total_steps=args.steps, checkpoint_every=args.checkpoint_every),
+                ckpt_manager=mgr, start_step=start,
+                on_metrics=lambda r: print(
+                    f"step {r['step']:5d} loss {r['loss']:.4f} gnorm {r['grad_norm']:.2f} "
+                    f"dt {r['dt']*1e3:.0f}ms" + (" STRAGGLER" if r["straggler"] else "")
+                ),
+            )
+    finally:
+        pf.close()
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    print(f"loss {first:.4f} -> {last:.4f}")
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

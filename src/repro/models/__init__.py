@@ -1,0 +1,3 @@
+"""Model zoo: every linear/contraction routes through the RMPM engine."""
+from repro.models.config import ArchConfig  # noqa: F401
+from repro.models.lm import LanguageModel, build_model  # noqa: F401

@@ -1,0 +1,100 @@
+"""RecurrentGemma / Griffin hybrid blocks  [arXiv:2402.19427].
+
+Residual pattern (rec, rec, attn) repeating (1 local-attention block per 2
+RG-LRU recurrent blocks).  Projections route through RMPM; the RG-LRU gate /
+diagonal recurrence is elementwise (f32, technique N/A — DESIGN.md).
+
+Train: associative scan over the sequence.  Decode: O(1) state update.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    Params,
+    causal_conv1d,
+    dense_init,
+    pein,
+)
+
+Array = jax.Array
+
+_C = 8.0  # Griffin's fixed scaling of the recurrence gate exponent
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RGLRUState:
+    conv: Array  # (B, K-1, W)
+    h: Array  # (B, W) recurrent hidden state
+
+
+def rglru_init(key, cfg) -> Params:
+    d = cfg.d_model
+    w = d  # lru width = d_model (RecurrentGemma)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], d, w),
+        "in_gate": dense_init(ks[1], d, w),
+        "conv_w": jax.random.normal(ks[2], (4, w), jnp.float32) * 0.2,
+        "wa": dense_init(ks[3], w, w, scale=0.02),
+        "wx": dense_init(ks[4], w, w, scale=0.02),
+        # Lambda init so a = sigmoid(lam)^(c r) sits in [0.9, 0.999]
+        "lam": jnp.log(jnp.linspace(0.9, 0.999, w) / (1 - jnp.linspace(0.9, 0.999, w))).astype(jnp.float32),
+        "out": dense_init(ks[5], w, d),
+    }
+
+
+def _rglru_scan(x: Array, r: Array, i: Array, lam: Array, h0: Array | None):
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), associative.
+
+    x, r, i: (B, S, W); lam: (W,).  Returns (h_seq, h_last).
+    """
+    log_a_base = jax.nn.log_sigmoid(lam)[None, None, :]  # (1,1,W), negative
+    log_a = _C * r * log_a_base  # (B, S, W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    if h0 is not None:
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None, :], gated], axis=1)
+    a_sc, h_sc = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h_sc = h_sc[:, 1:]
+    return h_sc, h_sc[:, -1]
+
+
+def rglru_block_apply(
+    p: Params, x: Array, cfg, state: RGLRUState | None = None
+) -> tuple[Array, RGLRUState | None]:
+    """Griffin recurrent residual block body. x: (B, S, D)."""
+    policy = cfg.policy
+    gate = jax.nn.gelu(pein("bsd,dw->bsw", x, p["in_gate"]["w"], "mlp_up", policy))
+    xr = pein("bsd,dw->bsw", x, p["in_x"]["w"], "mlp_up", policy)
+    conv_out, conv_state = causal_conv1d(
+        xr, p["conv_w"], state.conv if state is not None else None
+    )
+    r = jax.nn.sigmoid(pein("bsw,wv->bsv", conv_out, p["wa"]["w"], "rnn_gate", policy))
+    i = jax.nn.sigmoid(pein("bsw,wv->bsv", conv_out, p["wx"]["w"], "rnn_gate", policy))
+    h, h_last = _rglru_scan(
+        conv_out, r, i, p["lam"], state.h if state is not None else None
+    )
+    out = pein("bsw,wd->bsd", h * gate, p["out"]["w"], "mlp_down", policy)
+    new_state = RGLRUState(conv=conv_state, h=h_last) if state is not None else None
+    return out, new_state
+
+
+def rglru_state_init(cfg, batch: int) -> RGLRUState:
+    w = cfg.d_model
+    return RGLRUState(
+        conv=jnp.zeros((batch, 3, w), jnp.float32),
+        h=jnp.zeros((batch, w), jnp.float32),
+    )

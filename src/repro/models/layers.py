@@ -1,0 +1,418 @@
+"""Shared layers.  Every contraction routes through the RMPM engine (C1):
+the paper's multi-precision multiplier is the only multiplier in the system.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.core.rmpm import mp_einsum, mp_matmul
+
+Array = jax.Array
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Policy-routed contractions
+# ---------------------------------------------------------------------------
+
+
+def pmm(x: Array, w: Array, op: str, policy: PrecisionPolicy) -> Array:
+    """Policy-routed matmul: the op-class name selects the precision mode
+    (the paper's application-program-driven mode-select bits)."""
+    return mp_matmul(
+        x, w, policy.mode_for(op), rounding=policy.rounding, impl=policy.impl
+    )
+
+
+def pein(eq: str, a: Array, b: Array, op: str, policy: PrecisionPolicy) -> Array:
+    return mp_einsum(
+        eq, a, b, policy.mode_for(op), rounding=policy.rounding, impl=policy.impl
+    )
+
+
+def plinear(x: Array, p: Params, op: str, policy: PrecisionPolicy) -> Array:
+    out = pmm(x, p["w"], op, policy)
+    if "b" in p:
+        out = out + p["b"].astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: float | None = None) -> Params:
+    std = scale if scale is not None else (2.0 / (d_in + d_out)) ** 0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def stacked(keys, init_fn, *args, **kw):
+    """Initialize per-layer params stacked along a leading layer axis
+    (matches the lax.scan-over-layers execution)."""
+    return jax.vmap(lambda k: init_fn(k, *args, **kw))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * (1.0 + scale)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]  # (1, S, 1, half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# KV cache (bf16 or block-scaled int8 — the paper's precision lever applied
+# to decode memory, section Perf)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: Array  # (B, Smax, Hkv, hd)  bf16 or int8
+    v: Array
+    k_scale: Array | None  # (B, Smax, Hkv, 1) f32 when int8
+    v_scale: Array | None
+    pos: Array  # (Smax,) int32 — global position stored in each slot (-1 empty)
+    length: Array  # scalar int32 — total tokens ever appended
+
+
+def kv_cache_init(batch: int, s_max: int, n_kv: int, hd: int, dtype: str) -> KVCache:
+    # distinct k/v buffers: donated arguments must not alias
+    pos = jnp.full((s_max,), -1, jnp.int32)
+    if dtype == "int8":
+        z = lambda: jnp.zeros((batch, s_max, n_kv, hd), jnp.int8)
+        s = lambda: jnp.zeros((batch, s_max, n_kv, 1), jnp.float32)
+        return KVCache(z(), z(), s(), s(), pos, jnp.int32(0))
+    z = lambda: jnp.zeros((batch, s_max, n_kv, hd), jnp.bfloat16)
+    return KVCache(z(), z(), None, None, pos, jnp.int32(0))
+
+
+def stack_tree(n: int, tree):
+    """Stack a cache/state pytree along a new leading layer axis."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+
+def _quant_rows(x: Array) -> tuple[Array, Array]:
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def kv_cache_append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
+    """Append (B, S_new, Hkv, hd) f32 at slot length % capacity (ring buffer
+    for sliding-window caches; plain append while length < capacity).
+    Multi-token appends must not straddle the wrap point (prefill sizes the
+    cache to the prompt, so wrap only occurs in 1-token decode steps).
+    """
+    cap = cache.k.shape[1]
+    s_new = k_new.shape[1]
+    if s_new > cap:
+        # prefill longer than the (sliding-window) cache: keep the tail only
+        drop = s_new - cap
+        k_new = k_new[:, drop:]
+        v_new = v_new[:, drop:]
+        new_pos = cache.length + drop + jnp.arange(cap, dtype=jnp.int32)
+        length = cache.length + s_new
+        cache = KVCache(cache.k, cache.v, cache.k_scale, cache.v_scale,
+                        new_pos, cache.length)
+        s_new = cap
+        slot = jnp.int32(0)
+        pos = new_pos
+        total = length
+    else:
+        slot = jax.lax.rem(cache.length, cap)
+        pos = jax.lax.dynamic_update_slice(
+            cache.pos, cache.length + jnp.arange(s_new, dtype=jnp.int32), (slot,)
+        )
+        total = cache.length + s_new
+    if cache.k_scale is not None:
+        kq, ks = _quant_rows(k_new)
+        vq, vs = _quant_rows(v_new)
+        k = jax.lax.dynamic_update_slice(cache.k, kq, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache.v, vq, (0, slot, 0, 0))
+        kss = jax.lax.dynamic_update_slice(cache.k_scale, ks, (0, slot, 0, 0))
+        vss = jax.lax.dynamic_update_slice(cache.v_scale, vs, (0, slot, 0, 0))
+        return KVCache(k, v, kss, vss, pos, total)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+    return KVCache(k, v, None, None, pos, total)
+
+
+def _dequant_chunk(x: Array, scale: Array | None) -> Array:
+    if scale is None:
+        return x.astype(jnp.float32)
+    return x.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (chunked-KV online softmax — never materializes S x S)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: Array,  # (B, Sq, Hq, hd) f32
+    k: Array,  # (B, Skv, Hkv, hd) f32/bf16/int8
+    v: Array,
+    policy: PrecisionPolicy,
+    *,
+    causal: bool = True,
+    window: int = 0,  # sliding window (0 = unbounded)
+    q_offset: Array | int = 0,  # global position of q[0] (decode)
+    kv_len: Array | int | None = None,  # valid cache length
+    kv_positions: Array | None = None,  # (Skv,) per-slot global positions
+    k_scale: Array | None = None,
+    v_scale: Array | None = None,
+    chunk: int = 1024,
+) -> Array:
+    """Online-softmax attention, KV scanned in chunks.
+
+    GQA: Hq = Hkv * G.  Scores and attention-value products go through the
+    RMPM engine ('attn_qk' / 'attn_av' op classes).  The chunked scan keeps
+    the compiled working set at O(Sq * chunk) instead of O(Sq * Skv) — the
+    memory-roofline term depends directly on ``chunk``.
+    """
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        padded = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k, v = padded(k), padded(v)
+        if k_scale is not None:
+            k_scale, v_scale = padded(k_scale), padded(v_scale)
+        if kv_positions is not None:
+            kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    if kv_len is None:
+        kv_len = skv
+    if kv_positions is None:
+        kv_positions = jnp.arange(n_chunks * chunk, dtype=jnp.int32)
+        kv_positions = jnp.where(kv_positions < jnp.asarray(kv_len), kv_positions, -1)
+
+    qg = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) * (hd**-0.5)
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)
+
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, hkv, hd)
+    ksc = k_scale.reshape(b, n_chunks, chunk, hkv, 1) if k_scale is not None else None
+    vsc = v_scale.reshape(b, n_chunks, chunk, hkv, 1) if v_scale is not None else None
+
+    def step(carry, ci):
+        m, l, acc = carry
+        kt = _dequant_chunk(
+            jax.lax.dynamic_index_in_dim(kc, ci, 1, keepdims=False),
+            jax.lax.dynamic_index_in_dim(ksc, ci, 1, keepdims=False) if ksc is not None else None,
+        )
+        vt = _dequant_chunk(
+            jax.lax.dynamic_index_in_dim(vc, ci, 1, keepdims=False),
+            jax.lax.dynamic_index_in_dim(vsc, ci, 1, keepdims=False) if vsc is not None else None,
+        )
+        s = pein("bqhgd,bkhd->bhgqk", qg, kt, "attn_qk", policy)  # (B,Hkv,G,Sq,C)
+        kv_pos = jax.lax.dynamic_slice_in_dim(kv_positions, ci * chunk, chunk)
+        valid = kv_pos[None, :] >= 0
+        if causal:
+            valid &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            valid &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = pein("bhgqk,bkhd->bhgqd", p, vt, "attn_av", policy)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B,Hkv,G,Sq,hd) -> (B,Sq,Hq,hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + flash) — train and decode paths
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 4)
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, hq * hd, cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, hkv * hd, cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, hkv * hd, cfg.qkv_bias),
+        "wo": dense_init(ks[3], hq * hd, cfg.d_model),
+    }
+
+
+def attention_apply(
+    p: Params,
+    x: Array,
+    cfg,
+    *,
+    positions: Array | None = None,
+    cache: KVCache | None = None,
+    window: int = 0,
+    causal: bool = True,
+    kv_override: tuple[Array, Array] | None = None,  # cross-attention KV
+) -> tuple[Array, KVCache | None]:
+    policy = cfg.policy
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    sp = cfg.attn_shard == "sequence"
+    q = plinear(x, p["wq"], "qkv", policy).reshape(b, s, hq, hd)
+    if kv_override is None:
+        k = plinear(x, p["wk"], "qkv", policy).reshape(b, s, hkv, hd)
+        v = plinear(x, p["wv"], "qkv", policy).reshape(b, s, hkv, hd)
+        if positions is None:
+            positions = jnp.arange(s)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if sp:
+            # sequence-parallel attention: Q stays S-sharded over 'model';
+            # K/V are all-gathered (small for GQA) — without these explicit
+            # constraints GSPMD replicates the whole attention computation
+            # (measured 5-11x HLO-flop waste, EXPERIMENTS.md section Perf cell A)
+            from repro.distributed.sharding import BATCH_AXES as _BA, constrain as _c
+
+            q = _c(q, _BA, "model", None, None)
+            k = _c(k, _BA, None, None, None)
+            v = _c(v, _BA, None, None, None)
+        else:
+            from repro.distributed.sharding import BATCH_AXES as _BA, constrain as _c
+
+            q = _c(q, _BA, None, "model", None)
+            k = _c(k, _BA, None, "model", None)
+            v = _c(v, _BA, None, "model", None)
+    else:
+        enc = kv_override[0]
+        k = plinear(enc, p["wk"], "qkv", policy).reshape(b, enc.shape[1], hkv, hd)
+        v = plinear(enc, p["wv"], "qkv", policy).reshape(b, enc.shape[1], hkv, hd)
+        causal = False
+
+    if cache is not None and kv_override is None:
+        q_offset = cache.length
+        cache = kv_cache_append(cache, k, v)
+        if s > 1:
+            # prefill: attend over the fresh full-length K/V (the window
+            # cache may be smaller than the prompt; it keeps only the tail)
+            out = flash_attention(
+                q, k, v, policy, causal=causal, window=window,
+                q_offset=q_offset,
+                kv_positions=jnp.asarray(q_offset) + jnp.arange(s, dtype=jnp.int32),
+                chunk=cfg.attn_chunk,
+            )
+        else:
+            out = flash_attention(
+                q,
+                cache.k,
+                cache.v,
+                policy,
+                causal=causal,
+                window=window,
+                q_offset=q_offset,
+                kv_positions=cache.pos,
+                k_scale=cache.k_scale,
+                v_scale=cache.v_scale,
+                chunk=cfg.attn_chunk,
+            )
+    else:
+        out = flash_attention(
+            q, k, v, policy, causal=causal, window=window, chunk=cfg.attn_chunk
+        )
+    out = pmm(out.reshape(b, s, hq * hd), p["wo"]["w"], "out", policy)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(ks[0], d_model, d_ff),
+        "up": dense_init(ks[1], d_model, d_ff),
+        "down": dense_init(ks[2], d_ff, d_model),
+    }
+
+
+def swiglu_apply(p: Params, x: Array, policy: PrecisionPolicy) -> Array:
+    g = pmm(x, p["gate"]["w"], "mlp_up", policy)
+    u = pmm(x, p["up"]["w"], "mlp_up", policy)
+    return pmm(jax.nn.silu(g) * u, p["down"]["w"], "mlp_down", policy)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "up": dense_init(ks[0], d_model, d_ff, bias=True),
+        "down": dense_init(ks[1], d_ff, d_model, bias=True),
+    }
+
+
+def gelu_mlp_apply(p: Params, x: Array, policy: PrecisionPolicy) -> Array:
+    h = jax.nn.gelu(plinear(x, p["up"], "mlp_up", policy))
+    return plinear(h, p["down"], "mlp_down", policy)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (SSM / RG-LRU front)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: Array, w: Array, state: Array | None = None):
+    """x: (B, S, C); w: (K, C) depthwise.  Returns (y, new_state) where
+    state carries the trailing K-1 inputs for decode."""
+    ksz = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (ksz - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(ksz)
+    )
+    new_state = xp[:, -(ksz - 1) :, :] if ksz > 1 else None
+    return y, new_state

@@ -1,0 +1,461 @@
+"""Family-dispatching language model: dense / moe / vlm / ssm / hybrid / encdec.
+
+Functional style: ``init(key) -> params`` pytree; ``apply(params, batch)`` for
+the training forward; ``prefill``/``decode_step`` for serving.  Layers execute
+under ``lax.scan`` over stacked parameters (one compiled block body) with
+optional remat — essential for compile time at 512 devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import BATCH_AXES, constrain
+from repro.models import griffin as griffin_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    Params,
+    attention_apply,
+    attention_init,
+    dense_init,
+    gelu_mlp_apply,
+    gelu_mlp_init,
+    kv_cache_init,
+    pein,
+    rms_norm,
+    stack_tree,
+    stacked,
+    swiglu_apply,
+    swiglu_init,
+)
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DecodeState:
+    caches: Any  # family-specific pytree of stacked caches/states
+    position: Array  # scalar int32
+    enc_out: Array | None = None  # encdec: encoder activations
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ArchConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind in ("dense", "moe", "enc", "dec"):
+        p["attn"] = attention_init(ks[0], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if kind == "moe":
+            p["moe"] = moe_lib.moe_init(ks[1], cfg)
+        elif kind in ("enc", "dec"):
+            p["mlp"] = gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff)
+        else:
+            p["mlp"] = swiglu_init(ks[1], cfg.d_model, cfg.d_ff)
+        if kind == "dec":
+            p["cross"] = attention_init(ks[2], cfg)
+            p["norm3"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    elif kind == "ssm":
+        p["ssm"] = ssm_lib.mamba2_init(ks[0], cfg)
+    elif kind == "rec":
+        p["rec"] = griffin_lib.rglru_init(ks[0], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = swiglu_init(ks[1], cfg.d_model, cfg.d_ff)
+    elif kind == "attn_local":
+        p["attn"] = attention_init(ks[0], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = swiglu_init(ks[1], cfg.d_model, cfg.d_ff)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _constrain_act(x: Array, cfg: ArchConfig) -> Array:
+    if cfg.attn_shard == "sequence":
+        return constrain(x, BATCH_AXES, "model", None)
+    return constrain(x, BATCH_AXES, None, None)
+
+
+def _block_apply(
+    p: Params,
+    x: Array,
+    cfg: ArchConfig,
+    kind: str,
+    *,
+    positions: Array | None = None,
+    cache=None,
+    enc_out: Array | None = None,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    x = _constrain_act(x, cfg)
+    window = cfg.local_window if kind == "attn_local" else 0
+    if kind in ("dense", "moe", "enc", "dec", "attn_local"):
+        h, new_attn_cache = attention_apply(
+            p["attn"],
+            rms_norm(x, p["norm1"], cfg.norm_eps),
+            cfg,
+            positions=positions,
+            cache=cache["attn"] if isinstance(cache, dict) and "attn" in cache else cache,
+            window=window,
+            causal=(kind != "enc"),
+        )
+        x = x + h
+        if kind == "dec":
+            h, _ = attention_apply(
+                p["cross"],
+                rms_norm(x, p["norm3"], cfg.norm_eps),
+                cfg,
+                kv_override=(enc_out, enc_out),
+            )
+            x = x + h
+        xi = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            h, aux = moe_lib.moe_apply(p["moe"], xi, cfg)
+        elif kind in ("enc", "dec"):
+            h = gelu_mlp_apply(p["mlp"], xi, cfg.policy)
+        else:
+            h = swiglu_apply(p["mlp"], xi, cfg.policy)
+        x = x + h
+        return x, new_attn_cache, aux
+    if kind == "ssm":
+        h, new_state = ssm_lib.mamba2_apply(
+            p["ssm"], rms_norm(x, p["norm1"], cfg.norm_eps), cfg, state=cache
+        )
+        return x + h, new_state, aux
+    if kind == "rec":
+        h, new_state = griffin_lib.rglru_block_apply(
+            p["rec"], rms_norm(x, p["norm1"], cfg.norm_eps), cfg, state=cache
+        )
+        x = x + h
+        h = swiglu_apply(p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps), cfg.policy)
+        return x + h, new_state, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+def _layer_kinds(cfg: ArchConfig) -> list[str]:
+    if cfg.family in ("dense", "vlm"):
+        return ["dense"] * cfg.n_layers
+    if cfg.family == "moe":
+        return ["dense"] * cfg.moe_first_dense + ["moe"] * (
+            cfg.n_layers - cfg.moe_first_dense
+        )
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.hybrid_pattern or ("rec", "rec", "attn_local")
+        kinds = [pat[i % len(pat)] for i in range(cfg.n_layers)]
+        return kinds
+    if cfg.family == "encdec":
+        return ["dec"] * cfg.n_layers
+    raise ValueError(cfg.family)
+
+
+class LanguageModel:
+    """cfg-driven functional model covering all assigned families."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.kinds = _layer_kinds(cfg)
+        # contiguous runs of identical layer kinds are scanned together
+        self.segments: list[tuple[str, int]] = []
+        for kd in self.kinds:
+            if self.segments and self.segments[-1][0] == kd:
+                self.segments[-1] = (kd, self.segments[-1][1] + 1)
+            else:
+                self.segments.append((kd, 1))
+        # hybrid: scan over the repeating supergroup instead of per-kind runs
+        if cfg.family == "hybrid":
+            pat = cfg.hybrid_pattern or ("rec", "rec", "attn_local")
+            n_super, rem = divmod(cfg.n_layers, len(pat))
+            self.hybrid_pat = pat
+            self.n_super = n_super
+            self.hybrid_rem = [pat[i] for i in range(rem)]
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k_emb, k_layers, k_out, k_enc, k_extra = jax.random.split(key, 5)
+        params: Params = {
+            "embed": {
+                "w": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), jnp.float32)
+                * 0.02
+            },
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if cfg.family == "hybrid":
+            params["super"] = {
+                f"l{i}_{kd}": stacked(
+                    jax.random.split(jax.random.fold_in(k_layers, i), self.n_super),
+                    _block_init,
+                    cfg,
+                    kd,
+                )
+                for i, kd in enumerate(self.hybrid_pat)
+            }
+            if self.hybrid_rem:
+                rem_keys = jax.random.split(k_extra, len(self.hybrid_rem))
+                params["rem"] = {
+                    f"l{i}_{kd}": _block_init(rem_keys[i], cfg, kd)
+                    for i, kd in enumerate(self.hybrid_rem)
+                }
+        else:
+            params["layers"] = {}
+            seg_keys = jax.random.split(k_layers, len(self.segments))
+            for si, (kd, n) in enumerate(self.segments):
+                params["layers"][f"seg{si}_{kd}"] = stacked(
+                    jax.random.split(seg_keys[si], n), _block_init, cfg, kd
+                )
+        if cfg.family == "encdec":
+            enc_cfg = dataclasses.replace(cfg, n_layers=cfg.n_encoder_layers)
+            params["enc_layers"] = stacked(
+                jax.random.split(k_enc, cfg.n_encoder_layers), _block_init, cfg, "enc"
+            )
+            del enc_cfg
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(k_out, cfg.d_model, cfg.vocab, scale=0.02)
+        return params
+
+    # -- shared helpers -------------------------------------------------------
+
+    def _embed(self, params: Params, tokens: Array) -> Array:
+        x = params["embed"]["w"][tokens]  # gather — native
+        return _constrain_act(x.astype(jnp.float32), self.cfg)
+
+    def _logits(self, params: Params, x: Array) -> Array:
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = pein("bsd,vd->bsv", x, params["embed"]["w"], "logits", cfg.policy)
+        else:
+            logits = pein(
+                "bsd,dv->bsv", x, params["unembed"]["w"], "logits", cfg.policy
+            )
+        if cfg.attn_shard == "sequence":
+            return constrain(logits, BATCH_AXES, "model", None)
+        return constrain(logits, BATCH_AXES, None, "model")
+
+    def _scan_segment(self, seg_params, x, kind, *, caches=None, positions=None, enc_out=None):
+        """lax.scan over a stacked segment.  Returns (x, new_caches, aux)."""
+        cfg = self.cfg
+
+        def body(carry, layer):
+            xc, aux = carry
+            lp, lcache = layer
+            xo, new_cache, a = _block_apply(
+                lp, xc, cfg, kind, positions=positions, cache=lcache, enc_out=enc_out
+            )
+            return (xo, aux + a), new_cache
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), new_caches = jax.lax.scan(
+            body_fn, (x, jnp.float32(0.0)), (seg_params, caches)
+        )
+        return x, new_caches, aux
+
+    # -- training forward -----------------------------------------------------
+
+    def apply(self, params: Params, batch: dict[str, Array]) -> tuple[Array, Array]:
+        """Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self._apply_encdec(params, batch)
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if cfg.family == "vlm":
+            pix = batch["pixel_embeds"].astype(jnp.float32)  # (B, n_vis, D)
+            x = jnp.concatenate([pix, x], axis=1)
+        positions = jnp.arange(x.shape[1])
+        aux_total = jnp.float32(0.0)
+        if cfg.family == "hybrid":
+            x, aux_total = self._hybrid_stack(params, x, positions)
+        else:
+            for si, (kd, _) in enumerate(self.segments):
+                x, _, aux = self._scan_segment(
+                    params["layers"][f"seg{si}_{kd}"], x, kd, positions=positions
+                )
+                aux_total = aux_total + aux
+        if cfg.family == "vlm":
+            x = x[:, batch["pixel_embeds"].shape[1] :]
+        return self._logits(params, x), aux_total
+
+    def _hybrid_stack(self, params, x, positions, caches=None):
+        """Scan over supergroups of the repeating hybrid pattern."""
+        cfg = self.cfg
+        pat = self.hybrid_pat
+
+        def body(carry, layer):
+            xc, aux = carry
+            lp, lcaches = layer
+            new_caches = {}
+            for i, kd in enumerate(pat):
+                key = f"l{i}_{kd}"
+                xc, nc, a = _block_apply(
+                    lp[key],
+                    xc,
+                    cfg,
+                    kd,
+                    positions=positions,
+                    cache=None if lcaches is None else lcaches[key],
+                )
+                aux = aux + a
+                new_caches[key] = nc
+            return (xc, aux), (None if lcaches is None else new_caches)
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        sup_caches = None if caches is None else caches["super"]
+        (x, aux), new_sup = jax.lax.scan(
+            body_fn, (x, jnp.float32(0.0)), (params["super"], sup_caches)
+        )
+        new_caches = {"super": new_sup, "rem": {}}
+        for i, kd in enumerate(self.hybrid_rem):
+            key = f"l{i}_{kd}"
+            rc = None if caches is None else caches["rem"][key]
+            x, nc, a = _block_apply(
+                params["rem"][key], x, cfg, kd, positions=positions, cache=rc
+            )
+            aux = aux + a
+            new_caches["rem"][key] = nc
+        if caches is None:
+            return x, aux
+        return x, aux, new_caches
+
+    def _apply_encdec(self, params, batch):
+        cfg = self.cfg
+        frames = batch["frames"].astype(jnp.float32)  # (B, S_enc, D) stub embeds
+        enc = _constrain_act(frames, cfg)
+        enc_pos = jnp.arange(enc.shape[1])
+        enc, _, _ = self._scan_segment(
+            params["enc_layers"], enc, "enc", positions=enc_pos
+        )
+        enc = rms_norm(enc, params["final_norm"], cfg.norm_eps)  # shared final norm
+        x = self._embed(params, batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+        x, _, aux = self._scan_segment(
+            params["layers"]["seg0_dec"], x, "dec", positions=positions, enc_out=enc
+        )
+        return self._logits(params, x), aux
+
+    # -- serving ----------------------------------------------------------------
+
+    def init_decode_state(self, batch: int, max_len: int, enc_len: int = 0) -> DecodeState:
+        cfg = self.cfg
+        hd, hkv = cfg.head_dim, cfg.n_kv_heads
+
+        def kv(n, cap=None):
+            return stack_tree(
+                n, kv_cache_init(batch, cap or max_len, hkv, hd, cfg.kv_cache_dtype)
+            )
+
+        if cfg.family in ("dense", "vlm", "moe", "encdec"):
+            caches = {
+                f"seg{si}_{kd}": kv(n) for si, (kd, n) in enumerate(self.segments)
+            }
+        elif cfg.family == "ssm":
+            caches = {
+                f"seg{si}_{kd}": stack_tree(n, ssm_lib.ssm_state_init(cfg, batch))
+                for si, (kd, n) in enumerate(self.segments)
+            }
+        elif cfg.family == "hybrid":
+            sup = {}
+            for i, kd in enumerate(self.hybrid_pat):
+                if kd == "rec":
+                    sup[f"l{i}_{kd}"] = stack_tree(
+                        self.n_super, griffin_lib.rglru_state_init(cfg, batch)
+                    )
+                else:  # local attention: cache only the window (ring buffer)
+                    wlen = min(max_len, cfg.local_window or max_len)
+                    sup[f"l{i}_{kd}"] = kv(self.n_super, cap=wlen)
+            rem = {
+                f"l{i}_{kd}": (
+                    griffin_lib.rglru_state_init(cfg, batch)
+                    if kd == "rec"
+                    else kv_cache_init(
+                        batch,
+                        min(max_len, cfg.local_window or max_len),
+                        hkv,
+                        hd,
+                        cfg.kv_cache_dtype,
+                    )
+                )
+                for i, kd in enumerate(self.hybrid_rem)
+            }
+            caches = {"super": sup, "rem": rem}
+        else:
+            raise ValueError(cfg.family)
+        return DecodeState(caches=caches, position=jnp.int32(0), enc_out=None)
+
+    def decode_step(
+        self,
+        params: Params,
+        tokens: Array,
+        state: DecodeState,
+        pixel_embeds: Array | None = None,
+    ) -> tuple[Array, DecodeState]:
+        """tokens: (B, S_step) — one (or a few) new token(s) per sequence.
+        ``pixel_embeds`` (VLM prefill): patch embeddings prepended to the
+        prompt."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if pixel_embeds is not None:
+            x = jnp.concatenate([pixel_embeds.astype(jnp.float32), x], axis=1)
+        positions = state.position + jnp.arange(x.shape[1])
+        aux = jnp.float32(0.0)
+        new_caches = {}
+        if cfg.family == "hybrid":
+            x, aux, new_caches = self._hybrid_stack(
+                params, x, positions, caches=state.caches
+            )
+        else:
+            enc_out = state.enc_out
+            for si, (kd, _) in enumerate(self.segments):
+                key = f"seg{si}_{kd}"
+                x, nc, _ = self._scan_segment(
+                    params["layers"][key] if "layers" in params else params[key],
+                    x,
+                    kd,
+                    caches=state.caches[key],
+                    positions=positions,
+                    enc_out=enc_out,
+                )
+                new_caches[key] = nc
+        if pixel_embeds is not None:
+            x = x[:, pixel_embeds.shape[1] :]
+        logits = self._logits(params, x)
+        new_state = DecodeState(
+            caches=new_caches,
+            position=state.position + (tokens.shape[1] if pixel_embeds is None
+                                       else tokens.shape[1] + pixel_embeds.shape[1]),
+            enc_out=state.enc_out,
+        )
+        return logits, new_state
+
+    def prefill_encoder(self, params: Params, frames: Array, state: DecodeState) -> DecodeState:
+        cfg = self.cfg
+        enc = _constrain_act(frames.astype(jnp.float32), cfg)
+        enc, _, _ = self._scan_segment(
+            params["enc_layers"], enc, "enc", positions=jnp.arange(enc.shape[1])
+        )
+        enc = rms_norm(enc, params["final_norm"], cfg.norm_eps)
+        return dataclasses.replace(state, enc_out=enc)
+
+
+def build_model(cfg: ArchConfig) -> LanguageModel:
+    return LanguageModel(cfg)

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer: GShard-style capacity routing, EP-sharded.
+
+Dispatch/combine are one-hot contractions (semantically gathers) and stay in
+native precision; the expert GEMMs — the FLOP hot spot — route through the
+RMPM engine ('moe_expert' op class).  Routing groups are sequence chunks of
+``moe_group_size`` tokens (batch dim stays data-sharded, expert dim is
+model-sharded => the dispatch einsum is collective-free and the combine
+reduces over experts with one psum over the model axis, inserted by GSPMD).
+
+Decode (S == 1) groups over the batch instead, with capacity
+ceil(B * top_k / E * cf) — keeping the expert-GEMM waste at ~cf instead of
+the E/top_k x a per-token capacity grouping would cost.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, pein
+
+Array = jax.Array
+
+
+def moe_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.moe_experts, cfg.d_model, cfg.d_ff
+    std = (2.0 / (d + f)) ** 0.5
+    p = {
+        "router": dense_init(ks[0], d, e, scale=0.02),
+        "gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * std,
+        "up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * std,
+        "down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * std,
+    }
+    if cfg.moe_shared_experts:
+        from repro.models.layers import swiglu_init
+
+        p["shared"] = swiglu_init(ks[4], d, f * cfg.moe_shared_experts)
+    return p
+
+
+def _route(x: Array, router_w: Array, cfg) -> tuple[Array, Array, Array]:
+    """x: (..., T, D) -> top-k (weights, ids) and router probs (aux loss)."""
+    logits = pein("gtd,de->gte", x, router_w, "router", cfg.policy)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.moe_top_k)
+    weights = weights / (weights.sum(axis=-1, keepdims=True) + 1e-9)
+    return weights, ids, probs
+
+
+def _dispatch_combine(ids: Array, weights: Array, e: int, capacity: int):
+    """Build (G, T, E, C) dispatch one-hot and combine weights.
+
+    Position-in-expert via cumulative sum over the token axis (GShard):
+    tokens beyond capacity are dropped (their combine weight is 0).
+    """
+    g, t, k = ids.shape
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)  # (G, T, K, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(g, k * t, e)  # k-major: slot
+    # priority: earlier tokens (and lower k) win capacity slots
+    pos = jnp.cumsum(flat, axis=1) - 1.0  # (G, K*T, E)
+    pos = pos.reshape(g, k, t, e).transpose(0, 2, 1, 3)  # (G, T, K, E)
+    keep = (pos < capacity) & (onehot > 0)
+    # Loop over the (small) k axis so the (G,T,E,C) slot tensor is never
+    # materialized with a K dimension — 8x memory for kimi-scale MoE.
+    dispatch = jnp.zeros((g, t, e, capacity), jnp.bfloat16)
+    combine = jnp.zeros((g, t, e, capacity), jnp.bfloat16)
+    for ki in range(k):
+        slot = jax.nn.one_hot(pos[:, :, ki].astype(jnp.int32), capacity, dtype=jnp.float32)
+        slot = slot * keep[:, :, ki, :, None]  # (G, T, E, C)
+        dispatch = dispatch + slot.astype(jnp.bfloat16)
+        combine = combine + (slot * weights[:, :, ki, None, None]).astype(jnp.bfloat16)
+    return dispatch, combine
+
+
+def moe_apply(p: Params, x: Array, cfg) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    policy = cfg.policy
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    if s == 1:  # decode: group over batch
+        xg = x.reshape(1, b, d)
+        t = b
+    else:
+        gs = min(cfg.moe_group_size, s)
+        assert s % gs == 0, (s, gs)
+        xg = x.reshape(b * (s // gs), gs, d)
+        t = gs
+    capacity = max(1, int(-(-t * k // e) * cfg.moe_capacity_factor))
+
+    weights, ids, probs = _route(xg, p["router"]["w"], cfg)
+    dispatch, combine = _dispatch_combine(ids, weights, e, capacity)
+    # load-balance auxiliary loss (Switch): E * <f_e * p_e>
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(ids[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    xin = jnp.einsum(  # gather: native precision (one-hot)
+        "gtec,gtd->gecd", dispatch, xg.astype(jnp.bfloat16)
+    ).astype(jnp.float32)
+    h_gate = pein("gecd,edf->gecf", xin, p["gate"], "moe_expert", policy)
+    h_up = pein("gecd,edf->gecf", xin, p["up"], "moe_expert", policy)
+    h = jax.nn.silu(h_gate) * h_up
+    out_e = pein("gecf,efd->gecd", h, p["down"], "moe_expert", policy)
+    out = jnp.einsum(
+        "gtec,gecd->gtd", combine, out_e.astype(jnp.bfloat16)
+    ).astype(jnp.float32)
+    out = out.reshape(b, s, d)
+
+    if "shared" in p:
+        from repro.models.layers import swiglu_apply
+
+        out = out + swiglu_apply(p["shared"], x, policy)
+    return out, aux

