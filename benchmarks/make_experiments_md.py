@@ -1,7 +1,11 @@
-"""Regenerate the EXPERIMENTS.md dry-run + roofline tables from
-experiments/dryrun/*.json.
+"""Regenerate the EXPERIMENTS.md generated tables: the planner sweep from
+BENCH_plan.json (benchmarks/plan_sweep.py) and, when present, the dry-run +
+roofline tables from experiments/dryrun/*.json.
 
-    PYTHONPATH=src python -m benchmarks.make_experiments_md > EXPERIMENTS.tables.md
+    PYTHONPATH=src python -m benchmarks.plan_sweep          # produce BENCH_plan.json
+    PYTHONPATH=src python -m benchmarks.make_experiments_md --write
+    #   ^ refreshes the generated block of EXPERIMENTS.md in place
+    PYTHONPATH=src python -m benchmarks.make_experiments_md > tables.md  # stdout only
 """
 from __future__ import annotations
 
@@ -11,6 +15,10 @@ import os
 import sys
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+BENCH_PLAN = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
+EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+BEGIN_MARK = "<!-- BEGIN GENERATED (benchmarks/make_experiments_md.py) -->"
+END_MARK = "<!-- END GENERATED -->"
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCH_ORDER = [
@@ -106,8 +114,108 @@ def _move_note(r) -> str:
     return "grad compression / EP-local dispatch / larger per-pod batch"
 
 
+# --------------------------------------------------------------------------
+# Planner sweep tables (BENCH_plan.json, benchmarks/plan_sweep.py)
+# --------------------------------------------------------------------------
+
+
+def load_bench_plan(path: str = BENCH_PLAN) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def plan_measured_table(doc: dict) -> list[str]:
+    out = ["| n | impl | mode | depth | wall | rel err | est t | dominant |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in doc.get("measured", []):
+        out.append(
+            f"| {r['n']} | {r['impl']} | {r['mode']} | {r['depth']} "
+            f"| {fmt_s(r['wall_us'] * 1e-6)} | {r['rel_err']:.1e} "
+            f"| {fmt_s(r['est_t_us'] * 1e-6)} | {r['est_dominant']} |"
+        )
+    return out
+
+
+def plan_selection_table(doc: dict) -> list[str]:
+    out = ["| backend | n | accuracy | mode | impl | depth | est t | bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for backend, recs in doc.get("planner", {}).items():
+        for r in recs:
+            out.append(
+                f"| {backend} | {r['n']} | {r['accuracy']:.1e} | {r['mode']} "
+                f"| {r['impl']} | {r['depth']} | {fmt_s(r['est_t_us'] * 1e-6)} "
+                f"| {r['dominant']} |"
+            )
+    return out
+
+
+def generated_sections() -> str:
+    parts: list[str] = []
+    doc = load_bench_plan()
+    if doc is not None:
+        parts.append(
+            f"### Plan sweep (BENCH_plan.json, host={doc['host_backend']}, "
+            f"sizes={list(doc['sizes'])})\n"
+        )
+        if doc.get("measured"):
+            parts.append("Measured (size x mode x depth x impl), wall-clock on "
+                         "this host vs cost-model estimate:\n")
+            parts.append("\n".join(plan_measured_table(doc)))
+            parts.append("")
+        parts.append("Planner selections (what `plan_matmul` picks per "
+                      "(backend, size, accuracy)):\n")
+        parts.append("\n".join(plan_selection_table(doc)))
+        parts.append("")
+    else:
+        parts.append("### Plan sweep\n")
+        parts.append("_BENCH_plan.json not found — run "
+                     "`python -m benchmarks.plan_sweep` first._\n")
+    recs = load("paper_baseline")
+    if recs:
+        n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+        n_na = sum(1 for r in recs.values() if r["status"] == "n/a")
+        n_fail = len(recs) - n_ok - n_na
+        parts.append(f"### Dry-run sweep (paper_baseline): {n_ok} ok / "
+                     f"{n_na} n-a / {n_fail} fail\n")
+        parts.append("\n".join(dryrun_table(recs)))
+        parts.append("\n### Roofline (single-pod 16x16, paper_baseline)\n")
+        parts.append("\n".join(roofline_table(recs)))
+    else:
+        parts.append("### Dry-run sweep\n")
+        parts.append("_experiments/dryrun/ is empty — run "
+                     "`python -m repro.launch.dryrun --all` on a machine with "
+                     "spare RAM to populate the roofline tables._")
+    return "\n".join(parts).rstrip() + "\n"
+
+
+def write_experiments_md(path: str = EXPERIMENTS_MD) -> None:
+    """Replace the marked generated block of EXPERIMENTS.md in place."""
+    with open(path) as f:
+        text = f.read()
+    if BEGIN_MARK not in text or END_MARK not in text:
+        raise SystemExit(f"{path} has no generated-block markers")
+    head, rest = text.split(BEGIN_MARK, 1)
+    _, tail = rest.split(END_MARK, 1)
+    new = head + BEGIN_MARK + "\n" + generated_sections() + END_MARK + tail
+    with open(path, "w") as f:
+        f.write(new)
+    print(f"refreshed generated block of {path}")
+
+
 def main() -> None:
-    policy = sys.argv[1] if len(sys.argv) > 1 else "paper_baseline"
+    argv = [a for a in sys.argv[1:]]
+    if "--write" in argv:
+        write_experiments_md()
+        return
+    policy = argv[0] if argv else "paper_baseline"
+    doc = load_bench_plan()
+    if doc is not None:
+        print(f"### Plan sweep (host={doc['host_backend']})\n")
+        if doc.get("measured"):
+            print("\n".join(plan_measured_table(doc)) + "\n")
+        print("\n".join(plan_selection_table(doc)) + "\n")
     recs = load(policy)
     n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
     n_na = sum(1 for r in recs.values() if r["status"] == "n/a")

@@ -1,0 +1,136 @@
+"""Planner sweep: measure (size x mode x depth x impl) and record what the
+planner would have picked — the repo's perf trajectory seed (EXPERIMENTS.md
+section Plan sweep is generated from this file's output).
+
+    PYTHONPATH=src python -m benchmarks.plan_sweep                 # full sweep
+    PYTHONPATH=src python -m benchmarks.plan_sweep --sizes 256,512 --iters 3
+    PYTHONPATH=src python -m benchmarks.make_experiments_md        # render
+
+Emits ``BENCH_plan.json``: one record per measured cell with wall time,
+cost-model estimate, and the planner's own selection for that (size,
+accuracy) so estimate-vs-measured drift is visible in one file.
+
+Wall times here are CPU (this container); the cost model is TPU-balance.
+The *ordering* within a lever (fewer passes faster; depth crossover at large
+n; limb-copy traffic visible) is what the sweep validates — absolute
+microseconds are machine-local.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core.precision import MODE_PASSES, Mode
+from repro.plan import estimate, execute, plan_matmul
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
+
+MODES = (Mode.M8, Mode.M16, Mode.M24)
+IMPLS = ("native", "xla")  # pallas interpret-mode timing is not meaningful
+DEPTHS = (0, 1, 2)
+ACCURACIES = (2.0**-4, 2.0**-12, 2.0**-20)
+
+
+def sweep_cell(n: int, mode: Mode, impl: str, depth: int, iters: int,
+               rng: np.random.Generator) -> dict:
+    a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+
+    def run(x, y):
+        from repro.core.rmpm import mp_matmul
+
+        return mp_matmul(x, y, mode, impl=impl, strassen_depth=depth)
+
+    fn = jax.jit(run)
+    us = timeit(fn, a, b, warmup=1, iters=iters)
+    out = np.asarray(fn(a, b), np.float64)
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    rel = float(np.abs(out - ref).max() / np.abs(ref).max())
+    est = estimate(n, n, n, mode, impl, depth)
+    return {
+        "n": n,
+        "mode": mode.name,
+        "impl": impl,
+        "depth": depth,
+        "passes": MODE_PASSES[mode],
+        "wall_us": us,
+        "rel_err": rel,
+        "est_t_us": est.t_total_s * 1e6,
+        "est_flops": est.flops,
+        "est_hbm_bytes": est.hbm_bytes,
+        "est_dominant": est.dominant,
+    }
+
+
+def planner_selections(sizes, backend: str) -> list[dict]:
+    recs = []
+    for n in sizes:
+        for acc in ACCURACIES:
+            p = plan_matmul((n, n), (n, n), accuracy=acc, backend=backend,
+                            max_depth=2)
+            recs.append({
+                "n": n,
+                "accuracy": acc,
+                "backend": backend,
+                "mode": p.mode.name,
+                "impl": p.impl,
+                "depth": p.strassen_depth,
+                "est_t_us": p.cost.t_total_s * 1e6,
+                "dominant": p.cost.dominant,
+                "reason": p.reason,
+            })
+    return recs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="256,512,1024")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--out", default=OUT)
+    ap.add_argument("--skip-measure", action="store_true",
+                    help="planner selections only (fast)")
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    rng = np.random.default_rng(0)
+
+    measured = []
+    if not args.skip_measure:
+        for n in sizes:
+            for impl in IMPLS:
+                for mode in MODES:
+                    if impl == "native" and mode != Mode.M24:
+                        continue  # native ignores mode; measure once as ~M24
+                    for depth in DEPTHS:
+                        if n // (2**depth) < 64:
+                            continue
+                        rec = sweep_cell(n, mode, impl, depth, args.iters, rng)
+                        measured.append(rec)
+                        print(
+                            f"n={n} {impl}/{mode.name}/d{depth}: "
+                            f"{rec['wall_us']:.0f}us rel={rec['rel_err']:.1e}",
+                            flush=True,
+                        )
+
+    doc = {
+        "host_backend": jax.default_backend(),
+        "sizes": sizes,
+        "measured": measured,
+        "planner": {
+            bk: planner_selections(sizes + (4096, 16384), bk)
+            for bk in ("cpu", "tpu")
+        },
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out}: {len(measured)} measured cells, "
+          f"{sum(len(v) for v in doc['planner'].values())} planner selections")
+
+
+if __name__ == "__main__":
+    main()

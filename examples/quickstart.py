@@ -7,6 +7,7 @@ Demonstrates the paper's core ideas in 60 lines:
   * auto-mode (paper mode 1): operand probe picks the cheapest precision
   * the precision/cost ladder (paper Tables 2/7/9)
   * Strassen block matmul with 7 leaf products (paper section 3.1)
+  * the planner (repro.plan): shape+accuracy -> (mode, depth, impl)
 """
 import numpy as np
 import jax
@@ -51,3 +52,13 @@ out = strassen_matmul(a, b, depth=1, align=64)
 print(f"  depth=1: rel_err={rel_err(out):.2e}, leaf matmuls=7 (classical: 8)")
 out = mp_matmul(a, b, Mode.M16, strassen_depth=1)
 print(f"  Strassen OUTSIDE x RMPM M16 INSIDE (the paper's full stack): rel_err={rel_err(out):.2e}")
+
+print("=== the planner: shape + accuracy -> (mode, depth, impl) ===")
+from repro.plan import matmul as planned_matmul, plan_matmul
+
+for n, acc in ((256, 2**-4), (4096, 2**-12), (16384, 2**-20)):
+    p = plan_matmul((n, n), (n, n), accuracy=acc, backend="tpu")
+    print(f"  ({n}x{n}) @ acc 2^{int(np.log2(acc))}: {p.mode.name}/"
+          f"{p.impl}/depth={p.strassen_depth} ({p.cost.dominant}-bound)")
+out = planned_matmul(a, b, accuracy=2**-12)  # plans for THIS backend, executes
+print(f"  planned execution on {jax.default_backend()}: rel_err={rel_err(out):.2e}")

@@ -19,7 +19,11 @@ class PrecisionPolicy:
     default: Mode = Mode.M24
     overrides: tuple[tuple[str, Mode], ...] = ()
     rounding: str = "rne"
-    impl: str = "xla"  # 'xla' | 'pallas' | 'native'
+    impl: str = "xla"  # 'xla' | 'pallas' | 'native' | 'auto' (planner picks)
+    # Largest Strassen depth the planner (repro.plan) may choose for this
+    # policy's matmuls.  0 keeps every contraction classical — bit-identical
+    # to the pre-planner dispatch; serving/benchmark paths opt in.
+    max_strassen_depth: int = 0
 
     def mode_for(self, op: str) -> Mode:
         for name, mode in self.overrides:
@@ -30,9 +34,17 @@ class PrecisionPolicy:
     def with_impl(self, impl: str) -> "PrecisionPolicy":
         return dataclasses.replace(self, impl=impl)
 
+    def with_strassen(self, max_depth: int) -> "PrecisionPolicy":
+        return dataclasses.replace(self, max_strassen_depth=max_depth)
+
     def describe(self) -> str:
         ov = ", ".join(f"{n}={m.name}" for n, m in self.overrides)
-        return f"default={self.default.name}" + (f" [{ov}]" if ov else "")
+        out = f"default={self.default.name}" + (f" [{ov}]" if ov else "")
+        if self.impl != "xla":
+            out += f" impl={self.impl}"
+        if self.max_strassen_depth:
+            out += f" strassen<={self.max_strassen_depth}"
+        return out
 
 
 # The paper-faithful baseline: every multiply at single-precision fidelity

@@ -36,6 +36,12 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--policy", default="native_f32", choices=tuple(PRESETS))
+    ap.add_argument(
+        "--accuracy", type=float, default=0.0,
+        help="relative-error budget for bulk GEMMs; when set, the matmul "
+             "planner (repro.plan) derives the precision policy from the "
+             "cost model instead of --policy",
+    )
     ap.add_argument("--mesh", default="", help="e.g. '4,2' for (data=4, model=2)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
@@ -43,6 +49,16 @@ def main() -> None:
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     cfg = cfg.with_policy(PRESETS[args.policy])
+    if args.accuracy > 0:
+        from repro.plan import plan_model_policy
+
+        planned, plans = plan_model_policy(
+            cfg, tokens=args.batch * args.seq, accuracy=args.accuracy
+        )
+        cfg = cfg.with_policy(planned)
+        print(f"planned policy ({args.accuracy:.1e} budget): {planned.describe()}")
+        for op, p in plans.items():
+            print(f"  {op}: {p.describe()}")
     if cfg.family in ("encdec", "vlm"):
         raise SystemExit("use examples/ for multimodal drivers on CPU")
     model = build_model(cfg)

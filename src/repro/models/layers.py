@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import PrecisionPolicy
-from repro.core.rmpm import mp_einsum, mp_matmul
+from repro.core.rmpm import mp_einsum
+from repro.plan import execute, plan_matmul
 
 Array = jax.Array
 Params = dict[str, Any]
@@ -22,10 +23,19 @@ Params = dict[str, Any]
 
 def pmm(x: Array, w: Array, op: str, policy: PrecisionPolicy) -> Array:
     """Policy-routed matmul: the op-class name selects the precision mode
-    (the paper's application-program-driven mode-select bits)."""
-    return mp_matmul(
-        x, w, policy.mode_for(op), rounding=policy.rounding, impl=policy.impl
+    (the paper's application-program-driven mode-select bits), the planner
+    (repro.plan) selects Strassen depth and — when ``policy.impl='auto'`` —
+    the execution impl.  Planning happens at trace time on static shapes and
+    is cached, so a scanned layer stack plans each distinct GEMM once."""
+    plan = plan_matmul(
+        tuple(x.shape),
+        tuple(w.shape),
+        mode=policy.mode_for(op),
+        impl=None if policy.impl == "auto" else policy.impl,
+        rounding=policy.rounding,
+        max_depth=policy.max_strassen_depth,
     )
+    return execute(plan, x, w)
 
 
 def pein(eq: str, a: Array, b: Array, op: str, policy: PrecisionPolicy) -> Array:

@@ -1,0 +1,28 @@
+"""repro.plan — cost-model-driven matmul planner/executor.
+
+Unifies the paper's three run-time levers (RMPM precision mode, Strassen
+depth, execution impl) behind one shape- and accuracy-aware API:
+
+    plan  = plan_matmul(shape_a, shape_b, accuracy=2**-12, backend='tpu')
+    out   = execute(plan, a, b)          # or: matmul(a, b, accuracy=2**-12)
+
+See DESIGN.md section Planner for the cost model.
+"""
+from repro.plan.cost import (  # noqa: F401
+    MODE_REL_ERROR,
+    NATIVE_REL_ERROR,
+    CostEstimate,
+    cheapest_mode,
+    estimate,
+    limb_factors,
+    strassen_overhead,
+)
+from repro.plan.planner import (  # noqa: F401
+    Plan,
+    clear_plan_cache,
+    execute,
+    matmul,
+    plan_cache_stats,
+    plan_matmul,
+    plan_model_policy,
+)

@@ -1,0 +1,424 @@
+"""The matmul planner: one place where (mode, Strassen depth, impl) is chosen.
+
+Before this subsystem the three run-time levers the paper exposes — RMPM
+precision mode (C1/C2), Strassen depth (C4) and execution impl — were
+hard-coded at every call site.  ``plan_matmul`` turns a *shape + accuracy*
+request into an executable ``Plan`` via the roofline cost model in
+``repro.plan.cost``; ``execute`` runs a plan on concrete operands.  Plans are
+cached per static key, so tracing a model re-plans each distinct GEMM shape
+exactly once (DESIGN.md section Planner).
+
+    plan_matmul(shape_a, shape_b, accuracy=..., backend=...) -> Plan
+    execute(plan, a, b) -> Array
+
+Example (doctested)::
+
+    >>> from repro.plan import plan_matmul
+    >>> p = plan_matmul((4096, 4096), (4096, 4096), accuracy=2**-12,
+    ...                 backend="tpu")
+    >>> p.mode.name, p.impl, p.strassen_depth >= 1
+    ('M16', 'pallas', True)
+    >>> tiny = plan_matmul((8, 16), (16, 8), accuracy=2**-12, backend="tpu")
+    >>> tiny.strassen_depth
+    0
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+
+from repro.core.precision import DF32_MODES, DoubleF32, Mode
+from repro.plan import cost as cost_lib
+from repro.plan.cost import CostEstimate, MODE_REL_ERROR, NATIVE_REL_ERROR
+
+Array = jax.Array
+
+_DF32 = "df32"
+_MAX_DEPTH_DEFAULT = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An executable matmul decision: every lever pinned, costs attached."""
+
+    shape_a: tuple[int, ...]  # (..., M, K)
+    shape_b: tuple[int, int]  # (K, N)
+    dtype: str  # 'float32' | 'df32'
+    mode: Mode
+    impl: str  # 'xla' | 'pallas' | 'native'
+    strassen_depth: int
+    rounding: str
+    backend: str
+    cost: CostEstimate
+    reason: str
+    accuracy: float | None = None
+    align: int = 128
+
+    @property
+    def batch(self) -> int:
+        return math.prod(self.shape_a[:-2]) if len(self.shape_a) > 2 else 1
+
+    @property
+    def mkn(self) -> tuple[int, int, int]:
+        return (self.shape_a[-2], self.shape_a[-1], self.shape_b[1])
+
+    @property
+    def out_shape(self) -> tuple[int, ...]:
+        return self.shape_a[:-1] + (self.shape_b[1],)
+
+    def describe(self) -> str:
+        m, k, n = self.mkn
+        return (
+            f"[{self.batch}x]({m}x{k})@({k}x{n}) -> mode={self.mode.name} "
+            f"impl={self.impl} depth={self.strassen_depth} "
+            f"({self.cost.dominant}-bound, ~{self.cost.t_total_s*1e6:.1f}us) "
+            f"| {self.reason}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Plan cache — keyed on the full static request; hit == no re-planning.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def entries(self) -> int:
+        return len(_PLAN_CACHE)
+
+
+_PLAN_CACHE: dict[tuple, Plan] = {}
+_STATS = CacheStats()
+
+
+def plan_cache_stats() -> CacheStats:
+    return _STATS
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _STATS.hits = 0
+    _STATS.misses = 0
+
+
+# ---------------------------------------------------------------------------
+# Planning
+# ---------------------------------------------------------------------------
+
+
+def _impl_candidates(
+    mode: Mode, impl: str | None, backend: str, accuracy: float | None,
+    mode_pinned: bool, rounding: str,
+) -> list[str]:
+    if impl is not None:
+        return [impl]
+    if mode in DF32_MODES:
+        # Validation-grade extended precision: the Neumaier scan path
+        # (core/rmpm._limb_matmul_dd) — see DESIGN.md changed-assumption #8
+        # for why the Pallas DD kernel saturates near 26-28 bits.
+        return ["xla"]
+    cands = []
+    # 'native' (plain f32 dot, fidelity ~= M24) is only eligible when the
+    # caller asked for an accuracy target that f32 meets — never when a
+    # specific mode was pinned (mode semantics, e.g. quantization studies,
+    # must be honoured) and never for non-RNE roundings (C3 runs in limbs).
+    # On TPU there is no 1-pass f32 unit (XLA emulates HIGHEST-precision f32
+    # dots with bf16 passes, i.e. the limb engine IS the native path), so
+    # 'native' is only a candidate on cpu/gpu backends.
+    if (
+        backend != "tpu"
+        and not mode_pinned
+        and rounding == "rne"
+        and accuracy is not None
+        and NATIVE_REL_ERROR <= accuracy
+    ):
+        cands.append("native")
+    cands.append("xla")
+    if backend == "tpu":
+        # Fused limb extraction only pays off with >= 2 limbs resident.
+        if cost_lib.MODE_LIMBS[mode] >= 2:
+            cands.append("pallas")
+    return cands
+
+
+def _depth_candidates(m: int, k: int, n: int, mode: Mode, max_depth: int,
+                      align: int) -> list[int]:
+    if mode in DF32_MODES:
+        return [0]  # DoubleF32 leaves cannot flow through the block adds
+    out = [0]
+    for d in range(1, max_depth + 1):
+        # every leaf must still be at least one MXU tile per side
+        if min(m, k, n) >= align * (2**d):
+            out.append(d)
+    return out
+
+
+def plan_matmul(
+    shape_a: tuple[int, ...],
+    shape_b: tuple[int, int],
+    *,
+    dtype: str = "float32",
+    accuracy: float | None = None,
+    mode: Mode | int | None = None,
+    impl: str | None = None,
+    backend: str | None = None,
+    rounding: str = "rne",
+    max_depth: int = _MAX_DEPTH_DEFAULT,
+    align: int = 128,
+) -> Plan:
+    """Choose (mode, Strassen depth, impl) for ``a @ b`` from the cost model.
+
+    Args:
+      shape_a: operand A shape ``(..., M, K)`` (leading dims are batch).
+      shape_b: operand B shape ``(K, N)``.
+      dtype: ``'float32'`` or ``'df32'`` (DoubleF32 hi/lo operand pairs).
+      accuracy: max acceptable relative error; the cheapest adequate RMPM
+        mode is selected (None -> single-precision fidelity, M24).
+      mode: pin the RMPM mode instead of deriving it from ``accuracy``.
+      impl: pin the execution impl ('xla' | 'pallas' | 'native').
+      backend: 'cpu' | 'tpu' | 'gpu'; None -> ``jax.default_backend()``.
+      rounding: limb-extraction rounding ('rne' | 'grte' | 'trunc').
+      max_depth: largest Strassen depth the cost model may choose.
+      align: leaf tile alignment (MXU tile side).
+
+    Returns a cached :class:`Plan`; identical static requests return the
+    identical object (see ``plan_cache_stats``).
+    """
+    shape_a = tuple(int(d) for d in shape_a)
+    shape_b = tuple(int(d) for d in shape_b)
+    if len(shape_a) < 2 or len(shape_b) != 2:
+        raise ValueError(f"need A (..., M, K) and B (K, N); got {shape_a} @ {shape_b}")
+    if shape_a[-1] != shape_b[0]:
+        raise ValueError(f"contraction mismatch {shape_a} @ {shape_b}")
+    if impl is not None and impl not in ("xla", "pallas", "native"):
+        raise ValueError(f"unknown impl {impl!r}: want 'xla' | 'pallas' | 'native'")
+    if dtype not in ("float32", _DF32):
+        raise ValueError(f"unknown dtype {dtype!r}: want 'float32' | 'df32'")
+    if backend is None:
+        backend = jax.default_backend()
+    key = (shape_a, shape_b, dtype, accuracy, mode if mode is None else int(mode),
+           impl, backend, rounding, max_depth, align)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        _STATS.hits += 1
+        return cached
+    _STATS.misses += 1
+
+    mode_pinned = mode is not None
+    if mode_pinned:
+        mode = Mode(mode)
+        if mode == Mode.AUTO:
+            raise ValueError(
+                "Mode.AUTO is a runtime operand probe (core.rmpm."
+                "mp_matmul_runtime); the planner needs a static mode or an "
+                "accuracy target"
+            )
+    else:
+        mode = cost_lib.cheapest_mode(accuracy)
+    if dtype == _DF32 and mode not in DF32_MODES:
+        if mode_pinned:
+            # pinned-mode semantics must be honoured, and f32 modes reject
+            # DoubleF32 operands at execution (core.rmpm._check_mode_operands)
+            raise ValueError(
+                f"mode {mode.name} pinned but dtype='df32': DoubleF32 "
+                f"operands need M32/M48"
+            )
+        mode = Mode.M32  # DoubleF32 operands need an extended-precision mode
+    # DF32 modes on plain f32 operands are legal (core.rmpm accepts them: the
+    # product of the given f32 values is computed past 2^-24 and returned as
+    # a DoubleF32 pair) — callers asking for accuracy < 2^-21 opt into the
+    # wider result type.
+
+    batch = math.prod(shape_a[:-2]) if len(shape_a) > 2 else 1
+    m, k = shape_a[-2], shape_a[-1]
+    n = shape_b[1]
+
+    best: tuple[tuple, CostEstimate, str, int] | None = None
+    for cand_impl in _impl_candidates(mode, impl, backend, accuracy,
+                                      mode_pinned, rounding):
+        for depth in _depth_candidates(m, k, n, mode, max_depth, align):
+            est = cost_lib.estimate(m, k, n, mode, cand_impl, depth, align=align)
+            if batch > 1:
+                est = CostEstimate(
+                    flops=est.flops * batch,
+                    hbm_bytes=est.hbm_bytes * batch,
+                    t_compute_s=est.t_compute_s * batch,
+                    t_memory_s=est.t_memory_s * batch,
+                )
+            # Roofline max() ties are common when compute-bound: break them
+            # toward less HBM traffic (headroom for everything co-scheduled),
+            # then fewer flops.
+            rank = (est.t_total_s, est.hbm_bytes, est.flops)
+            if best is None or rank < best[0]:
+                best = (rank, est, cand_impl, depth)
+    assert best is not None
+    _, est, chosen_impl, chosen_depth = best
+    why = []
+    why.append(
+        f"mode {mode.name} pinned" if mode_pinned
+        else f"mode {mode.name} cheapest for accuracy<={accuracy:.1e}"
+        if accuracy is not None else f"mode {mode.name} (single-precision default)"
+    )
+    why.append(f"impl {chosen_impl}" + (" pinned" if impl is not None else " by cost"))
+    why.append(f"depth {chosen_depth} by cost" if chosen_depth or max_depth
+               else "depth 0 (disabled)")
+    plan = Plan(
+        shape_a=shape_a,
+        shape_b=shape_b,
+        dtype=dtype,
+        mode=mode,
+        impl=chosen_impl,
+        strassen_depth=chosen_depth,
+        rounding=rounding,
+        backend=backend,
+        cost=est,
+        reason="; ".join(why),
+        accuracy=accuracy,
+        align=align,
+    )
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def execute(plan: Plan, a, b):
+    """Run a :class:`Plan` on concrete operands.
+
+    Leading batch dims of ``a`` are handled vmap-style (no flattening — a
+    reshape would merge differently-sharded dims; see core/rmpm.py and
+    EXPERIMENTS.md section Perf cell A), so ``execute`` itself is safe to
+    call under ``jax.vmap``.
+    """
+    from repro.core import rmpm, strassen
+
+    a_shape = a.hi.shape if isinstance(a, DoubleF32) else a.shape
+    if tuple(a_shape) != plan.shape_a or tuple(b.shape if not isinstance(b, DoubleF32) else b.hi.shape) != plan.shape_b:
+        raise ValueError(
+            f"operands {tuple(a_shape)} @ "
+            f"{tuple(b.shape if not isinstance(b, DoubleF32) else b.hi.shape)} "
+            f"do not match plan {plan.shape_a} @ {plan.shape_b}"
+        )
+    mm = functools.partial(
+        rmpm.mp_matmul, mode=plan.mode, rounding=plan.rounding, impl=plan.impl
+    )
+    if plan.strassen_depth == 0:
+        return mm(a, b)
+    leaf = mm
+
+    def mm2d(x, y):
+        return strassen.strassen_matmul(
+            x, y, depth=plan.strassen_depth, leaf_fn=leaf, align=plan.align
+        )
+
+    fn = mm2d
+    for _ in range(len(plan.shape_a) - 2):
+        fn = jax.vmap(fn, in_axes=(0, None))
+    return fn(a, b)
+
+
+def matmul(
+    a,
+    b,
+    *,
+    accuracy: float | None = None,
+    mode: Mode | int | None = None,
+    impl: str | None = None,
+    backend: str | None = None,
+    rounding: str = "rne",
+    max_depth: int = _MAX_DEPTH_DEFAULT,
+) -> Array:
+    """Plan-and-execute convenience: ``matmul(a, b, accuracy=2**-12)``."""
+    dtype = _DF32 if isinstance(a, DoubleF32) or isinstance(b, DoubleF32) else "float32"
+    shape_a = a.hi.shape if isinstance(a, DoubleF32) else a.shape
+    shape_b = b.hi.shape if isinstance(b, DoubleF32) else b.shape
+    plan = plan_matmul(
+        tuple(shape_a),
+        tuple(shape_b),
+        dtype=dtype,
+        accuracy=accuracy,
+        mode=mode,
+        impl=impl,
+        backend=backend,
+        rounding=rounding,
+        max_depth=max_depth,
+    )
+    return execute(plan, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Model-level bridge: derive a PrecisionPolicy from planned GEMMs
+# ---------------------------------------------------------------------------
+
+# Per-op tightening factors applied to the caller's bulk accuracy budget.
+# Numerically sensitive contractions demand more bits — the beyond-paper
+# MIXED policy's structure, now cost-derived instead of hand-tuned.
+_OP_ACCURACY_SCALE = {
+    "attn_qk": 2.0**-4,  # softmax logits: tight
+    "logits": 2.0**-4,
+    "router": 2.0**-6,  # MoE routing: tightest (top-k flips)
+}
+
+
+def plan_model_policy(cfg: Any, tokens: int, *, accuracy: float,
+                      backend: str | None = None, max_depth: int = 0,
+                      rounding: str = "rne"):
+    """Plan the dominant GEMMs of an ArchConfig-like model and fold the
+    decisions into a PrecisionPolicy (+ the per-op plans, for reporting).
+
+    ``accuracy`` is the bulk-GEMM relative-error budget; numerically
+    sensitive op classes are planned at a tightened budget (see
+    ``_OP_ACCURACY_SCALE``).  ``tokens`` is the expected batch*seq of one
+    step — it sets the M dim the cost model sees.
+    """
+    from repro.core.policy import PrecisionPolicy
+
+    d, ff, vocab = cfg.d_model, cfg.d_ff, cfg.vocab
+    qkv_out = cfg.n_heads * cfg.head_dim if cfg.n_heads else d
+    gemms = {
+        "qkv": (d, qkv_out),
+        "out": (qkv_out, d),
+        "mlp_up": (d, ff),
+        "mlp_down": (ff, d),
+        "logits": (d, vocab),
+        "attn_qk": (d, d),
+        "attn_av": (d, d),
+    }
+    if getattr(cfg, "moe_experts", 0):
+        gemms["router"] = (d, cfg.moe_experts)
+        gemms["moe_expert"] = (d, ff)
+    plans = {}
+    for op, (din, dout) in gemms.items():
+        acc = accuracy * _OP_ACCURACY_SCALE.get(op, 1.0)
+        plans[op] = plan_matmul(
+            (max(tokens, 1), din), (din, dout),
+            accuracy=acc, backend=backend, max_depth=max_depth,
+            rounding=rounding,
+        )
+    default_mode = plans["mlp_up"].mode
+    overrides = tuple(
+        (op, p.mode) for op, p in plans.items() if p.mode != default_mode
+    )
+    # one impl for the whole policy: what the planner chose for the largest
+    # GEMM (the vocab head dominates the step cost)
+    impl = plans["logits"].impl
+    depth = max(p.strassen_depth for p in plans.values())
+    policy = PrecisionPolicy(
+        default=default_mode,
+        overrides=overrides,
+        rounding=rounding,
+        impl=impl,
+        max_strassen_depth=depth if max_depth else 0,
+    )
+    return policy, plans

@@ -4,6 +4,11 @@
 step decodes one token for every active slot (one compiled executable —
 runtime-reconfigurable precision per step via the RMPM mode scalar if the
 policy asks for it).  Slot completion frees capacity (continuous batching).
+
+Precision dispatch routes through the matmul planner (``repro.plan``): pass
+``accuracy`` and the engine re-plans the model's PrecisionPolicy for its own
+decode shapes (batch_slots x model dims) before compiling — the paper's
+application-program-set mode bits, set by a cost model instead of by hand.
 """
 from __future__ import annotations
 
@@ -26,7 +31,34 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model: LanguageModel, params, batch_slots: int, max_len: int,
-                 greedy: bool = True):
+                 greedy: bool = True, accuracy: float | None = None,
+                 plan_backend: str | None = None):
+        if accuracy is not None:
+            # Plan (mode, impl, depth) for this engine's decode GEMMs and
+            # rebuild the model under the planned policy (DESIGN.md section
+            # Planner).  All matmuls inside decode_step then execute through
+            # repro.plan.execute via models.layers.pmm.
+            from repro.core.precision import DF32_MODES
+            from repro.plan import plan_model_policy
+
+            base = model.cfg.policy
+            policy, self.plans = plan_model_policy(
+                model.cfg, tokens=batch_slots, accuracy=accuracy,
+                backend=plan_backend, rounding=base.rounding,
+            )
+            if (
+                base.impl == "native"
+                and policy.impl == "xla"
+                and not any(p.mode in DF32_MODES for p in self.plans.values())
+            ):
+                # keep the fast CPU execution path when the base policy chose
+                # it and the planner has no better limb impl to offer — but
+                # never for DF32 modes, where 'xla' IS the limb engine and
+                # 'native' (plain f32) would break the accuracy budget
+                policy = policy.with_impl("native")
+            model = LanguageModel(model.cfg.with_policy(policy))
+        else:
+            self.plans = {}
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -35,6 +67,11 @@ class ServeEngine:
         self.state = model.init_decode_state(batch_slots, max_len)
         self._decode = jax.jit(model.decode_step)
         self.active: dict[int, dict] = {}
+
+    def describe_plans(self) -> str:
+        if not self.plans:
+            return "unplanned (explicit policy)"
+        return "\n".join(f"{op}: {p.describe()}" for op, p in self.plans.items())
 
     def generate_batch(self, requests: list[Request]) -> dict[int, list[int]]:
         """Simple offline batch API: same-length prompts padded to the max,

@@ -10,7 +10,8 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st  # property tests skip w/o hypothesis
 
 from repro.core import (
     MODE_LIMBS,

@@ -51,6 +51,10 @@ class TestParser:
         # fwd + recompute + 2 bwd matmuls per layer = ~4 units (allow fusion slack)
         assert fl >= 4 * 3 * 2 * 32**3
 
+    @pytest.mark.skipif(
+        not (hasattr(jax, "set_mesh") and hasattr(jax.sharding, "AxisType")),
+        reason="needs jax.set_mesh / jax.sharding.AxisType (jax >= 0.5)",
+    )
     def test_collective_bytes_multi_device(self):
         import subprocess, sys, os, textwrap
         code = textwrap.dedent("""

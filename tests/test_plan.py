@@ -1,0 +1,237 @@
+"""Planner subsystem (repro.plan): cost-model selection, execution
+correctness vs jnp.dot at mode tolerance, plan-cache behaviour, and the
+doctested plan_matmul example."""
+import dataclasses
+import doctest
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import DoubleF32, Mode, df32_from_f32
+from repro.plan import (
+    MODE_REL_ERROR,
+    Plan,
+    clear_plan_cache,
+    estimate,
+    execute,
+    matmul,
+    plan_cache_stats,
+    plan_matmul,
+    plan_model_policy,
+)
+from repro.plan import planner as planner_mod
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+class TestSelection:
+    """plan_matmul must pick distinct (mode, depth, impl) across scenarios."""
+
+    def test_four_distinct_scenarios(self):
+        scenarios = [
+            # (shape_a, shape_b, kwargs)
+            ((4096, 4096), (4096, 4096), dict(accuracy=2**-12, backend="tpu")),
+            ((256, 256), (256, 256), dict(accuracy=2**-4, backend="cpu")),
+            ((1024, 1024), (1024, 1024), dict(accuracy=None, backend="tpu")),
+            ((512, 512), (512, 512),
+             dict(accuracy=2**-30, backend="tpu", dtype="df32")),
+        ]
+        picks = [plan_matmul(a, b, **kw) for a, b, kw in scenarios]
+        decisions = {(p.mode, p.impl, p.strassen_depth) for p in picks}
+        assert len(decisions) == len(scenarios), [p.describe() for p in picks]
+        # the specific levers the cost model must exercise:
+        large, coarse, default, extended = picks
+        assert large.mode == Mode.M16 and large.strassen_depth >= 1
+        assert large.impl == "pallas"  # fused limb extraction on TPU
+        assert coarse.mode == Mode.M8  # cheapest adequate mode
+        assert default.mode == Mode.M24  # single-precision fidelity default
+        assert extended.mode in (Mode.M32, Mode.M48) and extended.impl == "xla"
+        assert extended.strassen_depth == 0  # DoubleF32 leaves: no block adds
+
+    def test_accuracy_ladder_monotone(self):
+        modes = [
+            plan_matmul((256, 256), (256, 256), accuracy=acc, backend="tpu").mode
+            for acc in (2**-4, 2**-12, 2**-20)
+        ]
+        assert modes == [Mode.M8, Mode.M16, Mode.M24]
+
+    def test_depth_grows_with_size(self):
+        depths = [
+            plan_matmul((n, n), (n, n), accuracy=2**-12, backend="tpu",
+                        max_depth=3).strassen_depth
+            for n in (128, 4096, 16384)
+        ]
+        assert depths[0] == 0
+        assert depths == sorted(depths)
+        assert depths[-1] >= 2
+
+    def test_tiny_shapes_stay_classical(self):
+        p = plan_matmul((8, 16), (16, 8), accuracy=2**-12, backend="tpu")
+        assert p.strassen_depth == 0
+
+    def test_pinned_mode_and_impl_respected(self):
+        p = plan_matmul((512, 512), (512, 512), mode=Mode.M8, impl="xla",
+                        backend="tpu", max_depth=2)
+        assert p.mode == Mode.M8 and p.impl == "xla"
+
+    def test_native_never_on_tpu(self):
+        p = plan_matmul((256, 256), (256, 256), accuracy=2**-4, backend="tpu")
+        assert p.impl != "native"
+
+    def test_auto_mode_rejected(self):
+        with pytest.raises(ValueError, match="AUTO"):
+            plan_matmul((64, 64), (64, 64), mode=Mode.AUTO)
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="mismatch"):
+            plan_matmul((64, 32), (64, 64))
+
+    def test_cost_estimate_sane(self):
+        p = plan_matmul((1024, 1024), (1024, 1024), accuracy=None, backend="tpu")
+        # M24 = 6 bf16 passes over 2*n^3 flops
+        assert p.cost.flops == pytest.approx(6 * 2 * 1024**3, rel=0.01)
+        assert p.cost.t_total_s > 0
+        assert p.cost.dominant in ("compute", "memory")
+
+    def test_strassen_estimate_trades_flops_for_bytes(self):
+        e0 = estimate(4096, 4096, 4096, Mode.M16, "pallas", 0)
+        e1 = estimate(4096, 4096, 4096, Mode.M16, "pallas", 1)
+        assert e1.flops < e0.flops  # 7/8 leaf saving (plus small adds)
+        assert e1.hbm_bytes > e0.hbm_bytes  # O(n^2) block-add traffic
+
+
+class TestExecution:
+    """execute(plan, a, b) must agree with jnp.dot to mode tolerance."""
+
+    @pytest.mark.parametrize("depth", [2, 3])
+    def test_strassen_deep_matches_dot(self, rng, depth):
+        a = _rand(rng, 256, 256)
+        b = _rand(rng, 256, 256)
+        p = plan_matmul(a.shape, b.shape, mode=Mode.M24, impl="xla",
+                        max_depth=depth, align=32)
+        # force the requested depth through a pinned plan if cost said less
+        p = dataclasses.replace(p, strassen_depth=depth)
+        out = np.asarray(execute(p, a, b), np.float64)
+        ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        rel = np.abs(out - ref).max() / np.abs(ref).max()
+        assert rel < MODE_REL_ERROR[Mode.M24] * 2**depth  # conditioning slack
+
+    @pytest.mark.parametrize(
+        "m,k,n", [(300, 270, 130), (1, 17, 5), (257, 129, 65), (33, 470, 31)]
+    )
+    def test_nonsquare_odd_shapes(self, rng, m, k, n):
+        a, b = _rand(rng, m, k), _rand(rng, k, n)
+        p = plan_matmul(a.shape, b.shape, mode=Mode.M16, impl="xla",
+                        max_depth=2, align=16)
+        p = dataclasses.replace(p, strassen_depth=2)
+        out = np.asarray(execute(p, a, b), np.float64)
+        ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        rel = np.abs(out - ref).max() / (np.abs(ref).max() + 1e-9)
+        assert rel < MODE_REL_ERROR[Mode.M16] * 8  # padding + recombine slack
+
+    def test_batched_leading_dims_vmap_safe(self, rng):
+        a = _rand(rng, 3, 2, 64, 64)
+        b = _rand(rng, 64, 64)
+        p = plan_matmul(a.shape, b.shape, mode=Mode.M24, impl="xla",
+                        max_depth=1, align=16)
+        p = dataclasses.replace(p, strassen_depth=1)
+        out = execute(p, a, b)
+        assert out.shape == (3, 2, 64, 64)
+        ref = np.einsum("btmk,kn->btmn", np.asarray(a, np.float64),
+                        np.asarray(b, np.float64))
+        np.testing.assert_allclose(np.asarray(out, np.float64), ref,
+                                   rtol=1e-4, atol=1e-4)
+        # and the executor itself can sit under an outer vmap
+        outer = jax.vmap(lambda x: execute(
+            plan_matmul(x.shape, b.shape, mode=Mode.M24, impl="xla"), x, b
+        ))(a.reshape(6, 64, 64))
+        np.testing.assert_allclose(
+            np.asarray(outer), np.asarray(out).reshape(6, 64, 64),
+            rtol=1e-5, atol=1e-5)
+
+    def test_matmul_convenience_df32(self, rng):
+        a, b = _rand(rng, 48, 256), _rand(rng, 256, 32)
+        out = matmul(df32_from_f32(a), df32_from_f32(b), accuracy=2**-28)
+        assert isinstance(out, DoubleF32)
+        ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+        o64 = np.asarray(out.hi, np.float64) + np.asarray(out.lo, np.float64)
+        assert np.abs(o64 - ref).max() / np.abs(ref).max() < 2**-28
+
+    def test_execute_rejects_wrong_shapes(self, rng):
+        a, b = _rand(rng, 32, 32), _rand(rng, 32, 32)
+        p = plan_matmul((64, 32), (32, 32))
+        with pytest.raises(ValueError, match="do not match plan"):
+            execute(p, a, b)
+
+
+class TestPlanCache:
+    def test_hit_returns_same_object(self):
+        p1 = plan_matmul((128, 128), (128, 128), accuracy=2**-12, backend="tpu")
+        s = plan_cache_stats()
+        assert (s.hits, s.misses) == (0, 1)
+        p2 = plan_matmul((128, 128), (128, 128), accuracy=2**-12, backend="tpu")
+        assert p2 is p1
+        s = plan_cache_stats()
+        assert (s.hits, s.misses) == (1, 1)
+
+    def test_distinct_keys_miss(self):
+        plan_matmul((128, 128), (128, 128), accuracy=2**-12, backend="tpu")
+        plan_matmul((128, 128), (128, 128), accuracy=2**-4, backend="tpu")
+        plan_matmul((128, 256), (256, 128), accuracy=2**-12, backend="tpu")
+        s = plan_cache_stats()
+        assert (s.hits, s.misses) == (0, 3)
+        assert s.entries == 3
+
+    def test_clear(self):
+        plan_matmul((128, 128), (128, 128))
+        clear_plan_cache()
+        s = plan_cache_stats()
+        assert (s.hits, s.misses, s.entries) == (0, 0, 0)
+
+    def test_model_trace_plans_each_gemm_once(self, rng):
+        # a scanned/jitted trace re-uses the cached plan per distinct shape
+        from repro.core.policy import PrecisionPolicy
+        from repro.models.layers import pmm
+
+        policy = PrecisionPolicy()
+        x = _rand(rng, 8, 64)
+        w = _rand(rng, 64, 64)
+
+        def f(x, w):
+            for _ in range(5):
+                x = pmm(x, w, "mlp_up", policy)
+            return x
+
+        jax.jit(f).lower(x, w)
+        s = plan_cache_stats()
+        assert s.misses == 1 and s.hits == 4
+
+
+class TestPolicyBridge:
+    def test_plan_model_policy(self):
+        from repro.configs import get_smoke_config
+
+        cfg = get_smoke_config("qwen1.5-0.5b")
+        policy, plans = plan_model_policy(cfg, tokens=8 * 128,
+                                          accuracy=2**-4, backend="tpu")
+        assert policy.default == Mode.M8  # bulk GEMMs at the coarse budget
+        # sensitive ops planned tighter than the bulk default
+        assert policy.mode_for("logits").value > Mode.M8.value
+        assert "mlp_up" in plans and plans["mlp_up"].impl in ("xla", "pallas")
+
+
+def test_plan_matmul_doctest():
+    results = doctest.testmod(planner_mod, verbose=False)
+    assert results.attempted >= 2
+    assert results.failed == 0
