@@ -1,8 +1,10 @@
 """Regenerate the EXPERIMENTS.md generated tables: the planner sweep from
-BENCH_plan.json (benchmarks/plan_sweep.py) and, when present, the dry-run +
-roofline tables from experiments/dryrun/*.json.
+BENCH_plan.json (benchmarks/plan_sweep.py), the serve sweep from
+BENCH_serve.json (benchmarks/serve_sweep.py) and, when present, the dry-run
++ roofline tables from experiments/dryrun/*.json.
 
     PYTHONPATH=src python -m benchmarks.plan_sweep          # produce BENCH_plan.json
+    PYTHONPATH=src python -m benchmarks.serve_sweep         # produce BENCH_serve.json
     PYTHONPATH=src python -m benchmarks.make_experiments_md --write
     #   ^ refreshes the generated block of EXPERIMENTS.md in place
     PYTHONPATH=src python -m benchmarks.make_experiments_md > tables.md  # stdout only
@@ -16,6 +18,7 @@ import sys
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 BENCH_PLAN = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
+BENCH_SERVE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
 BEGIN_MARK = "<!-- BEGIN GENERATED (benchmarks/make_experiments_md.py) -->"
 END_MARK = "<!-- END GENERATED -->"
@@ -151,6 +154,46 @@ def plan_selection_table(doc: dict) -> list[str]:
     return out
 
 
+def load_bench_serve(path: str = BENCH_SERVE) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def serve_table(doc: dict) -> list[str]:
+    out = ["| slots | accuracy | modes (prefill/decode) | tok/s | TTFT | latency | occupancy | steps |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in doc.get("cells", []):
+        acc = f"{r['accuracy']:.1e}" if r["accuracy"] else "unplanned"
+        out.append(
+            f"| {r['slots']} | {acc} | {r['mode_prefill']}/{r['mode_decode']} "
+            f"| {r['tok_s']:.1f} | {fmt_s(r['ttft_mean_s'])} "
+            f"| {fmt_s(r['latency_mean_s'])} | {r['occupancy']:.2f} "
+            f"| {r['decode_steps']} |"
+        )
+    return out
+
+
+def serve_section() -> list[str]:
+    doc = load_bench_serve()
+    if doc is None:
+        return ["### Serve sweep\n",
+                "_BENCH_serve.json not found — run "
+                "`python -m benchmarks.serve_sweep` first._\n"]
+    parts = [
+        f"### Serve sweep (BENCH_serve.json, host={doc['host_backend']}, "
+        f"arch={doc['arch']}, {doc['requests']} ragged requests)\n",
+        "Continuous-batching engine (`repro.serve`): throughput / TTFT / "
+        "slot occupancy vs (slots x accuracy); modes column shows the "
+        "per-phase planned RMPM mode (prefill vs decode — the run-time "
+        "reconfiguration inside one workload):\n",
+        "\n".join(serve_table(doc)),
+        "",
+    ]
+    return parts
+
+
 def generated_sections() -> str:
     parts: list[str] = []
     doc = load_bench_plan()
@@ -172,6 +215,7 @@ def generated_sections() -> str:
         parts.append("### Plan sweep\n")
         parts.append("_BENCH_plan.json not found — run "
                      "`python -m benchmarks.plan_sweep` first._\n")
+    parts.extend(serve_section())
     recs = load("paper_baseline")
     if recs:
         n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
@@ -216,6 +260,7 @@ def main() -> None:
         if doc.get("measured"):
             print("\n".join(plan_measured_table(doc)) + "\n")
         print("\n".join(plan_selection_table(doc)) + "\n")
+    print("\n".join(serve_section()) + "\n")
     recs = load(policy)
     n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
     n_na = sum(1 for r in recs.values() if r["status"] == "n/a")

@@ -1,0 +1,121 @@
+"""Serve sweep: throughput / TTFT / occupancy vs (slots x accuracy mode).
+
+Drives the continuous-batching engine (``repro.serve``) over a saturating
+ragged workload for every (slots, accuracy) cell and records steady-state
+decode throughput, mean TTFT, slot occupancy, and the per-phase planned
+modes — the serving-level view of the paper's run-time precision lever
+(EXPERIMENTS.md section Serve sweep is generated from this file's output).
+
+    PYTHONPATH=src python -m benchmarks.serve_sweep                # full sweep
+    PYTHONPATH=src python -m benchmarks.serve_sweep --slots 2,4 --requests 8
+    PYTHONPATH=src python -m benchmarks.make_experiments_md --write  # render
+
+Emits ``BENCH_serve.json``.  Wall times are CPU (this container): absolute
+tok/s is machine-local, but the *trends* — occupancy staying high as slots
+grow, the accuracy ladder trading mode passes for throughput — are the
+sweep's payload.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.policy import NATIVE_F32
+from repro.models import build_model
+from repro.serve import ServeEngine, ragged_requests
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+ACCURACIES = (None, 2.0**-4, 2.0**-12)  # None = unplanned native_f32 baseline
+
+
+def build_tiny(arch: str):
+    cfg = get_smoke_config(arch).with_policy(NATIVE_F32)
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def sweep_cell(model, params, slots: int, accuracy: float | None,
+               requests: int, prompt_len: int, max_new: int,
+               vocab: int) -> dict:
+    rng = np.random.default_rng(0)
+    reqs = ragged_requests(requests, vocab, prompt_len, max_new, rng)
+    eng = ServeEngine(
+        model, params, batch_slots=slots,
+        max_len=prompt_len + max_new + 8,
+        accuracy=accuracy, prefill_tokens=max(prompt_len // 2, 1),
+    )
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    outs = eng.drain()
+    wall = time.perf_counter() - t0
+    s = eng.metrics.summary()
+    modes = {
+        phase: plans["mlp_up"].mode.name
+        for phase, plans in eng.phase_plans.items()
+    } or {"prefill": model.cfg.policy.default.name,
+          "decode": model.cfg.policy.default.name}
+    return {
+        "slots": slots,
+        "accuracy": accuracy,
+        "requests": requests,
+        "tokens_out": s["tokens_out"],
+        "tok_s": round(s["tok_s"], 2),
+        "wall_s": round(wall, 3),
+        "ttft_mean_s": round(s["ttft_mean_s"], 4) if s["ttft_mean_s"] else None,
+        "latency_mean_s": (round(s["latency_mean_s"], 4)
+                           if s["latency_mean_s"] else None),
+        "occupancy": round(s["occupancy"], 3),
+        "decode_steps": s["decode_steps"],
+        "mode_prefill": modes.get("prefill"),
+        "mode_decode": modes.get("decode"),
+        "n_ok": len([r for r in reqs if outs.get(r.rid)]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--slots", default="1,2,4")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    cfg, model, params = build_tiny(args.arch)
+    slots_list = [int(s) for s in args.slots.split(",")]
+    cells = []
+    for slots in slots_list:
+        for acc in ACCURACIES:
+            cell = sweep_cell(model, params, slots, acc, args.requests,
+                              args.prompt_len, args.max_new, cfg.vocab)
+            cells.append(cell)
+            acc_s = f"{acc:.1e}" if acc else "unplanned"
+            print(f"slots={slots} accuracy={acc_s}: {cell['tok_s']} tok/s, "
+                  f"occupancy {cell['occupancy']}, "
+                  f"modes {cell['mode_prefill']}/{cell['mode_decode']}")
+    doc = {
+        "host_backend": jax.default_backend(),
+        "arch": args.arch,
+        "requests": args.requests,
+        "prompt_len": args.prompt_len,
+        "max_new": args.max_new,
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

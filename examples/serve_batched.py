@@ -1,5 +1,6 @@
-"""Batched serving: continuous-batching decode with a KV cache, runtime
-precision policy, and int8 KV-cache quantization.
+"""Continuous-batching serving: the streaming submit/step/drain API, staggered
+arrivals joining slots mid-flight, runtime precision policy, and int8
+KV-cache quantization.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -11,7 +12,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.policy import PRESETS
 from repro.models import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import Request, ServeEngine
 
 
 def build(kv_dtype: str):
@@ -30,14 +31,28 @@ def main():
     prompts = [rng.integers(0, 512, rng.integers(4, 12)).astype(np.int32) for _ in range(6)]
     reqs = [Request(prompt=p, max_new=12, rid=i) for i, p in enumerate(prompts)]
 
-    outs = {}
-    for kv_dtype in ("bfloat16", "int8"):
-        model, params = build(kv_dtype)
-        eng = ServeEngine(model, params, batch_slots=8, max_len=64)
-        outs[kv_dtype] = eng.generate_batch(reqs)
+    # streaming API: 6 ragged requests through 3 slots, two joining late —
+    # they take over slots freed by earlier completions (mid-flight join)
+    model, params = build("bfloat16")
+    eng = ServeEngine(model, params, batch_slots=3, max_len=64)
+    for r in reqs[:4]:
+        eng.submit(r)
+    for _ in range(4):
+        for rid, tok in eng.step():
+            print(f"  step event: req {rid} -> {tok}")
+    for r in reqs[4:]:
+        eng.submit(r)  # arrive while the first wave is still decoding
+    outs = {"bfloat16": eng.drain()}
+    print(eng.metrics.format_summary())
+
+    # same workload, int8 KV cache (offline batch API on the same engine)
+    model, params = build("int8")
+    eng8 = ServeEngine(model, params, batch_slots=3, max_len=64)
+    outs["int8"] = eng8.generate_batch(reqs)
+    for kv_dtype in outs:
         print(f"kv_cache={kv_dtype}:")
-        for rid, toks in outs[kv_dtype].items():
-            print(f"  req {rid}: {toks}")
+        for rid in sorted(outs[kv_dtype]):
+            print(f"  req {rid}: {outs[kv_dtype][rid]}")
 
     agree = sum(
         outs["bfloat16"][r.rid] == outs["int8"][r.rid] for r in reqs

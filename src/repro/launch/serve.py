@@ -1,7 +1,15 @@
-"""Serving launcher: batched greedy decode on any assigned architecture.
+"""Serving launcher: open-loop continuous batching on any assigned arch.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-2.7b --smoke \
-        --requests 6 --max-new 16 [--kv-int8]
+Requests arrive by a Poisson process (``--arrival-rate`` req/s of wall
+clock; 0 = everything at t=0), with ragged prompt lengths and per-request
+decode budgets, and stream through ``repro.serve.ServeEngine``.  Pass
+``--accuracy`` to let the matmul planner pick the RMPM precision mode per
+phase — prefill and decode GEMMs are planned separately, so a budget near a
+mode boundary flips the mode bits *between phases of the same workload*
+(the paper's run-time reconfiguration, end to end).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --requests 8 --slots 4 --arrival-rate 2 --accuracy 1e-3 [--kv-int8]
 """
 from __future__ import annotations
 
@@ -14,7 +22,33 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.policy import PRESETS
 from repro.models import build_model
-from repro.serve.engine import Request, ServeEngine
+from repro.plan import plan_cache_stats
+from repro.serve import Request, ServeEngine, ragged_requests
+
+
+def run_open_loop(eng: ServeEngine, reqs: list[Request], rate: float,
+                  rng: np.random.Generator) -> dict[int, list[int]]:
+    """Submit each request at its Poisson arrival time (wall clock), stepping
+    the engine in between — requests join slots mid-flight as capacity
+    frees."""
+    if rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(reqs)))
+    else:
+        arrivals = np.zeros(len(reqs))
+    t0 = time.perf_counter()
+    pending = list(zip(arrivals, reqs))
+    outputs: dict[int, list[int]] = {}
+    while pending or eng.scheduler.has_work():
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            eng.submit(pending.pop(0)[1])
+        if eng.scheduler.has_work():
+            eng.step()
+        elif pending:
+            time.sleep(min(pending[0][0] - now, 0.05))
+    for rid, toks in eng.drain().items():
+        outputs[rid] = toks
+    return outputs
 
 
 def main() -> None:
@@ -22,10 +56,19 @@ def main() -> None:
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="slot-array width (0 = one per request)")
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=12,
+                    help="max prompt length; actual lengths are ragged")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = all at t=0)")
     ap.add_argument("--policy", default="native_f32", choices=tuple(PRESETS))
+    ap.add_argument("--accuracy", type=float, default=None,
+                    help="plan per-phase precision for this relative-error "
+                         "budget instead of using the --policy preset modes")
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -39,22 +82,29 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
 
-    rng = np.random.default_rng(0)
-    reqs = [
-        Request(prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
-                max_new=args.max_new, rid=i)
-        for i in range(args.requests)
-    ]
-    eng = ServeEngine(model, params, batch_slots=max(args.requests, 1),
-                      max_len=args.prompt_len + args.max_new + 8)
+    rng = np.random.default_rng(args.seed)
+    reqs = ragged_requests(args.requests, cfg.vocab, args.prompt_len,
+                           args.max_new, rng)
+    slots = args.slots or max(args.requests, 1)
+    max_len = args.prompt_len + args.max_new + 8
+    eng = ServeEngine(
+        model, params, batch_slots=slots, max_len=max_len,
+        accuracy=args.accuracy,
+        prefill_tokens=max(args.prompt_len // 2, 1),
+    )
     t0 = time.perf_counter()
-    outs = eng.generate_batch(reqs)
+    outs = run_open_loop(eng, reqs, args.arrival_rate, rng)
     dt = time.perf_counter() - t0
-    total_toks = sum(len(v) for v in outs.values())
-    for rid, toks in outs.items():
-        print(f"req {rid}: {toks}")
-    print(f"{total_toks} tokens in {dt:.2f}s "
-          f"({total_toks/dt:.1f} tok/s incl compile; kv={cfg.kv_cache_dtype})")
+    for rid in sorted(outs):
+        print(f"req {rid}: {outs[rid]}")
+    print(f"plans:\n{eng.describe_plans()}")
+    stats = plan_cache_stats()
+    print(f"plan cache: {stats.entries} entries, "
+          f"{stats.hits} hits / {stats.misses} misses (process-wide)")
+    total = sum(len(v) for v in outs.values())
+    print(f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl compile; "
+          f"kv={cfg.kv_cache_dtype}; slots={slots})")
+    print(eng.metrics.format_summary())
 
 
 if __name__ == "__main__":

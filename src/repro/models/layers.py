@@ -120,18 +120,25 @@ class KVCache:
     k_scale: Array | None  # (B, Smax, Hkv, 1) f32 when int8
     v_scale: Array | None
     pos: Array  # (Smax,) int32 — global position stored in each slot (-1 empty)
-    length: Array  # scalar int32 — total tokens ever appended
+    # per-slot layout (continuous batching): pos is (B, Smax)
+    length: Array  # scalar int32 — total tokens ever appended; (B,) per-slot
 
 
-def kv_cache_init(batch: int, s_max: int, n_kv: int, hd: int, dtype: str) -> KVCache:
+def kv_cache_init(batch: int, s_max: int, n_kv: int, hd: int, dtype: str,
+                  per_slot: bool = False) -> KVCache:
     # distinct k/v buffers: donated arguments must not alias
-    pos = jnp.full((s_max,), -1, jnp.int32)
+    if per_slot:
+        pos = jnp.full((batch, s_max), -1, jnp.int32)
+        length = jnp.zeros((batch,), jnp.int32)
+    else:
+        pos = jnp.full((s_max,), -1, jnp.int32)
+        length = jnp.int32(0)
     if dtype == "int8":
         z = lambda: jnp.zeros((batch, s_max, n_kv, hd), jnp.int8)
         s = lambda: jnp.zeros((batch, s_max, n_kv, 1), jnp.float32)
-        return KVCache(z(), z(), s(), s(), pos, jnp.int32(0))
+        return KVCache(z(), z(), s(), s(), pos, length)
     z = lambda: jnp.zeros((batch, s_max, n_kv, hd), jnp.bfloat16)
-    return KVCache(z(), z(), None, None, pos, jnp.int32(0))
+    return KVCache(z(), z(), None, None, pos, length)
 
 
 def stack_tree(n: int, tree):
@@ -185,6 +192,50 @@ def kv_cache_append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
     return KVCache(k, v, None, None, pos, total)
 
 
+def _kv_append_row(c: KVCache, k_new: Array, v_new: Array) -> KVCache:
+    """Single-row append: ``c`` leaves carry no batch dim (k: (Smax, Hkv, hd),
+    pos: (Smax,), length: scalar).  Mirrors ``kv_cache_append`` including the
+    ring wrap and the long-prefill tail-keep."""
+    cap = c.k.shape[0]
+    s_new = k_new.shape[0]
+    if s_new > cap:
+        drop = s_new - cap
+        k_new, v_new = k_new[drop:], v_new[drop:]
+        pos = c.length + drop + jnp.arange(cap, dtype=jnp.int32)
+        total = c.length + s_new
+        slot = jnp.int32(0)
+        s_new = cap
+    else:
+        slot = jax.lax.rem(c.length, cap)
+        pos = jax.lax.dynamic_update_slice(
+            c.pos, c.length + jnp.arange(s_new, dtype=jnp.int32), (slot,)
+        )
+        total = c.length + s_new
+    if c.k_scale is not None:
+        kq, ks = _quant_rows(k_new)
+        vq, vs = _quant_rows(v_new)
+        return KVCache(
+            jax.lax.dynamic_update_slice(c.k, kq, (slot, 0, 0)),
+            jax.lax.dynamic_update_slice(c.v, vq, (slot, 0, 0)),
+            jax.lax.dynamic_update_slice(c.k_scale, ks, (slot, 0, 0)),
+            jax.lax.dynamic_update_slice(c.v_scale, vs, (slot, 0, 0)),
+            pos, total,
+        )
+    return KVCache(
+        jax.lax.dynamic_update_slice(c.k, k_new.astype(c.k.dtype), (slot, 0, 0)),
+        jax.lax.dynamic_update_slice(c.v, v_new.astype(c.v.dtype), (slot, 0, 0)),
+        None, None, pos, total,
+    )
+
+
+def kv_cache_append_slots(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
+    """Per-slot append for continuous batching: ``cache.length`` is (B,) and
+    ``cache.pos`` is (B, Smax), so every slot writes at its *own* ring offset
+    — slots at different sequence lengths share one compiled step
+    (DESIGN.md section Serving)."""
+    return jax.vmap(_kv_append_row)(cache, k_new, v_new)
+
+
 def _dequant_chunk(x: Array, scale: Array | None) -> Array:
     if scale is None:
         return x.astype(jnp.float32)
@@ -204,9 +255,9 @@ def flash_attention(
     *,
     causal: bool = True,
     window: int = 0,  # sliding window (0 = unbounded)
-    q_offset: Array | int = 0,  # global position of q[0] (decode)
+    q_offset: Array | int = 0,  # global position of q[0] (decode); (B,) per-slot
     kv_len: Array | int | None = None,  # valid cache length
-    kv_positions: Array | None = None,  # (Skv,) per-slot global positions
+    kv_positions: Array | None = None,  # (Skv,) or (B, Skv) global positions
     k_scale: Array | None = None,
     v_scale: Array | None = None,
     chunk: int = 1024,
@@ -230,7 +281,11 @@ def flash_attention(
         if k_scale is not None:
             k_scale, v_scale = padded(k_scale), padded(v_scale)
         if kv_positions is not None:
-            kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+            kv_positions = jnp.pad(
+                kv_positions,
+                ((0, 0), (0, pad)) if kv_positions.ndim == 2 else (0, pad),
+                constant_values=-1,
+            )
     if kv_len is None:
         kv_len = skv
     if kv_positions is None:
@@ -238,7 +293,9 @@ def flash_attention(
         kv_positions = jnp.where(kv_positions < jnp.asarray(kv_len), kv_positions, -1)
 
     qg = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32) * (hd**-0.5)
-    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)
+    q_offset = jnp.asarray(q_offset)
+    # per-slot decode: q_offset (B,) -> q_pos (B, Sq); shared: (Sq,)
+    q_pos = (q_offset[:, None] if q_offset.ndim else q_offset) + jnp.arange(sq)
 
     kc = k.reshape(b, n_chunks, chunk, hkv, hd)
     vc = v.reshape(b, n_chunks, chunk, hkv, hd)
@@ -256,13 +313,18 @@ def flash_attention(
             jax.lax.dynamic_index_in_dim(vsc, ci, 1, keepdims=False) if vsc is not None else None,
         )
         s = pein("bqhgd,bkhd->bhgqk", qg, kt, "attn_qk", policy)  # (B,Hkv,G,Sq,C)
-        kv_pos = jax.lax.dynamic_slice_in_dim(kv_positions, ci * chunk, chunk)
-        valid = kv_pos[None, :] >= 0
+        kv_pos = jax.lax.dynamic_slice_in_dim(
+            kv_positions, ci * chunk, chunk, axis=kv_positions.ndim - 1
+        )
+        # broadcast to (B|1, Sq|1, C) so per-slot positions mask per batch row
+        kv_b = kv_pos if kv_pos.ndim == 2 else kv_pos[None, :]  # (B|1, C)
+        q_b = q_pos if q_pos.ndim == 2 else q_pos[None, :]  # (B|1, Sq)
+        valid = kv_b[:, None, :] >= 0
         if causal:
-            valid &= kv_pos[None, :] <= q_pos[:, None]
+            valid = valid & (kv_b[:, None, :] <= q_b[:, :, None])
         if window:
-            valid &= kv_pos[None, :] > q_pos[:, None] - window
-        s = jnp.where(valid[None, None, None], s, -1e30)
+            valid = valid & (kv_b[:, None, :] > q_b[:, :, None] - window)
+        s = jnp.where(valid[:, None, None], s, -1e30)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
@@ -342,15 +404,18 @@ def attention_apply(
         causal = False
 
     if cache is not None and kv_override is None:
+        per_slot = cache.length.ndim == 1  # (B,) lengths: continuous batching
         q_offset = cache.length
-        cache = kv_cache_append(cache, k, v)
+        cache = (kv_cache_append_slots if per_slot else kv_cache_append)(cache, k, v)
         if s > 1:
             # prefill: attend over the fresh full-length K/V (the window
             # cache may be smaller than the prompt; it keeps only the tail)
+            fresh_pos = jnp.arange(s, dtype=jnp.int32)
+            fresh_pos = (q_offset[:, None] if per_slot else jnp.asarray(q_offset)) + fresh_pos
             out = flash_attention(
                 q, k, v, policy, causal=causal, window=window,
                 q_offset=q_offset,
-                kv_positions=jnp.asarray(q_offset) + jnp.arange(s, dtype=jnp.int32),
+                kv_positions=fresh_pos,
                 chunk=cfg.attn_chunk,
             )
         else:

@@ -42,7 +42,7 @@ Array = jax.Array
 @dataclasses.dataclass
 class DecodeState:
     caches: Any  # family-specific pytree of stacked caches/states
-    position: Array  # scalar int32
+    position: Array  # scalar int32; (B,) int32 in per-slot (serving) layout
     enc_out: Array | None = None  # encdec: encoder activations
 
 
@@ -355,13 +355,19 @@ class LanguageModel:
 
     # -- serving ----------------------------------------------------------------
 
-    def init_decode_state(self, batch: int, max_len: int, enc_len: int = 0) -> DecodeState:
+    def init_decode_state(self, batch: int, max_len: int, enc_len: int = 0,
+                          per_slot: bool = False) -> DecodeState:
+        """``per_slot=True`` builds the continuous-batching layout: every KV
+        cache carries (B,) lengths / (B, Smax) positions and ``position`` is
+        (B,), so slots at different sequence depths share one compiled decode
+        step (DESIGN.md section Serving)."""
         cfg = self.cfg
         hd, hkv = cfg.head_dim, cfg.n_kv_heads
 
         def kv(n, cap=None):
             return stack_tree(
-                n, kv_cache_init(batch, cap or max_len, hkv, hd, cfg.kv_cache_dtype)
+                n, kv_cache_init(batch, cap or max_len, hkv, hd,
+                                 cfg.kv_cache_dtype, per_slot=per_slot)
             )
 
         if cfg.family in ("dense", "vlm", "moe", "encdec"):
@@ -393,6 +399,7 @@ class LanguageModel:
                         hkv,
                         hd,
                         cfg.kv_cache_dtype,
+                        per_slot=per_slot,
                     )
                 )
                 for i, kd in enumerate(self.hybrid_rem)
@@ -400,7 +407,8 @@ class LanguageModel:
             caches = {"super": sup, "rem": rem}
         else:
             raise ValueError(cfg.family)
-        return DecodeState(caches=caches, position=jnp.int32(0), enc_out=None)
+        position = jnp.zeros((batch,), jnp.int32) if per_slot else jnp.int32(0)
+        return DecodeState(caches=caches, position=position, enc_out=None)
 
     def decode_step(
         self,
@@ -416,7 +424,9 @@ class LanguageModel:
         x = self._embed(params, tokens)
         if pixel_embeds is not None:
             x = jnp.concatenate([pixel_embeds.astype(jnp.float32), x], axis=1)
-        positions = state.position + jnp.arange(x.shape[1])
+        # per-slot layout: position (B,) -> positions (B, S); shared: (S,)
+        pos0 = state.position
+        positions = (pos0[:, None] if pos0.ndim else pos0) + jnp.arange(x.shape[1])
         aux = jnp.float32(0.0)
         new_caches = {}
         if cfg.family == "hybrid":

@@ -1,0 +1,12 @@
+"""repro.serve — continuous-batching serving subsystem.
+
+    scheduler.py  admission queue + slot lifecycle (WAITING/PREFILL/DECODE/DONE)
+    engine.py     masked compiled step over the fixed slot array + streaming API
+    metrics.py    tok/s, TTFT, latency, slot occupancy, plan-cache hits
+
+See DESIGN.md section Serving for the slot-array layout and masking
+invariants.
+"""
+from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler, ragged_requests  # noqa: F401

@@ -1,72 +1,237 @@
-"""Batched serving engine: continuous-batching decode over the KV cache.
+"""Masked step engine: true continuous batching over a fixed slot array.
 
-``ServeEngine`` keeps a fixed-size slot array; requests join free slots, each
-step decodes one token for every active slot (one compiled executable —
-runtime-reconfigurable precision per step via the RMPM mode scalar if the
-policy asks for it).  Slot completion frees capacity (continuous batching).
+``ServeEngine`` runs the streaming API
 
-Precision dispatch routes through the matmul planner (``repro.plan``): pass
-``accuracy`` and the engine re-plans the model's PrecisionPolicy for its own
-decode shapes (batch_slots x model dims) before compiling — the paper's
-application-program-set mode bits, set by a cost model instead of by hand.
+    rid = engine.submit(Request(prompt, max_new, rid))   # any time
+    events = engine.step()                               # [(rid, token), ...]
+    outputs = engine.drain()                             # run to completion
+
+over one compiled decode step.  The slot array is fixed at ``batch_slots``;
+per-slot state (KV positions, lengths, decode position) lives in the
+per-slot ``DecodeState`` layout (``models.lm.init_decode_state(per_slot=
+True)``), so slots at *different* sequence depths — and empty slots — share
+the same ``jax.jit`` step: finished rows are masked out (their state is
+frozen by a per-row select), new requests join mid-flight by scattering a
+solo-prefilled row into their slot.  This is the ReservationStations fan-in/
+fan-out shape from the ieee754fpu pipeline (SNIPPETS.md section 1) applied
+to decode: the step function is the shared pipeline, the scheduler is the
+fan-in.
+
+Prefill runs per-request at the prompt's true length (batch=1) — no padded
+positions ever enter the KV cache — then the resulting row is written into
+the request's slot (one ``dynamic_update_slice`` per state leaf).
+
+Precision phases: with ``accuracy=...`` the engine plans *two* policies via
+``repro.plan.plan_model_policy`` — one for prefill GEMMs (prompt_tokens x d)
+and one for decode GEMMs (slots x d) — and compiles each phase under its own
+policy.  That is the paper's run-time mode switch exercised inside a single
+workload: the mode bits flip between phases while the params and the KV
+cache stream through unchanged (DESIGN.md section Serving).
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import LanguageModel
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Request, Scheduler, Ticket
+
+__all__ = ["Request", "ServeEngine"]
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray  # (S,) int32
-    max_new: int = 16
-    rid: int = 0
+def _plan_phase(model: LanguageModel, tokens: int, accuracy: float,
+                backend: str | None):
+    """Plan one phase's policy (prefill or decode) for its GEMM M-dim."""
+    from repro.core.precision import DF32_MODES
+    from repro.plan import plan_model_policy
+
+    base = model.cfg.policy
+    policy, plans = plan_model_policy(
+        model.cfg, tokens=tokens, accuracy=accuracy,
+        backend=backend, rounding=base.rounding,
+    )
+    if (
+        base.impl == "native"
+        and policy.impl == "xla"
+        and not any(p.mode in DF32_MODES for p in plans.values())
+    ):
+        # keep the fast CPU execution path when the base policy chose it and
+        # the planner has no better limb impl to offer — but never for DF32
+        # modes, where 'xla' IS the limb engine and 'native' (plain f32)
+        # would break the accuracy budget
+        policy = policy.with_impl("native")
+    return LanguageModel(model.cfg.with_policy(policy)), plans
+
+
+def _batch_axes(model: LanguageModel, slots: int, max_len: int):
+    """Per-leaf batch-axis index of the per-slot DecodeState, found by
+    comparing abstract shapes at two slot counts (no allocation).  Cache
+    layouts put batch at different axes (stacked caches: axis 1 after the
+    layer axis; un-stacked hybrid remainder / position: axis 0) — this is
+    the one place that knows, so scatter and select stay layout-generic."""
+    a = jax.eval_shape(
+        lambda: model.init_decode_state(slots, max_len, per_slot=True))
+    b = jax.eval_shape(
+        lambda: model.init_decode_state(slots + 1, max_len, per_slot=True))
+
+    def axis(x, y):
+        for i, (p, q) in enumerate(zip(x.shape, y.shape)):
+            if p != q:
+                return i
+        raise ValueError(f"no batch axis in state leaf {x.shape}")
+
+    return jax.tree.map(axis, a, b)
 
 
 class ServeEngine:
+    #: decode-phase accuracy tightening: autoregressive decode feeds its
+    #: rounding errors back (every generated token conditions the rest),
+    #: while prefill errors are one-shot, so the decode phase plans at
+    #: ``accuracy * DECODE_ACCURACY_SCALE`` — a budget near a mode boundary
+    #: therefore flips the RMPM mode bits between the phases of one workload.
+    DECODE_ACCURACY_SCALE = 2.0**-4
+
     def __init__(self, model: LanguageModel, params, batch_slots: int, max_len: int,
                  greedy: bool = True, accuracy: float | None = None,
-                 plan_backend: str | None = None):
+                 plan_backend: str | None = None,
+                 prefill_tokens: int | None = None,
+                 decode_accuracy_scale: float | None = None):
+        # metrics first: its plan-cache snapshot must predate phase planning
+        # so plan_cache_delta() counts the plans this engine triggers
+        self.metrics = ServeMetrics(batch_slots)
         if accuracy is not None:
-            # Plan (mode, impl, depth) for this engine's decode GEMMs and
-            # rebuild the model under the planned policy (DESIGN.md section
-            # Planner).  All matmuls inside decode_step then execute through
-            # repro.plan.execute via models.layers.pmm.
-            from repro.core.precision import DF32_MODES
-            from repro.plan import plan_model_policy
-
-            base = model.cfg.policy
-            policy, self.plans = plan_model_policy(
-                model.cfg, tokens=batch_slots, accuracy=accuracy,
-                backend=plan_backend, rounding=base.rounding,
-            )
-            if (
-                base.impl == "native"
-                and policy.impl == "xla"
-                and not any(p.mode in DF32_MODES for p in self.plans.values())
-            ):
-                # keep the fast CPU execution path when the base policy chose
-                # it and the planner has no better limb impl to offer — but
-                # never for DF32 modes, where 'xla' IS the limb engine and
-                # 'native' (plain f32) would break the accuracy budget
-                policy = policy.with_impl("native")
-            model = LanguageModel(model.cfg.with_policy(policy))
+            # Per-phase planning (DESIGN.md section Serving): decode GEMMs
+            # see M = batch_slots at a tightened budget, prefill GEMMs see
+            # M = prompt tokens at the caller's budget.
+            scale = (self.DECODE_ACCURACY_SCALE if decode_accuracy_scale is None
+                     else decode_accuracy_scale)
+            self.model_decode, decode_plans = _plan_phase(
+                model, batch_slots, accuracy * scale, plan_backend)
+            self.model_prefill, prefill_plans = _plan_phase(
+                model, prefill_tokens or max_len, accuracy, plan_backend)
+            self.phase_plans = {"prefill": prefill_plans, "decode": decode_plans}
+            # flat view kept for the PR-1 API (`engine.plans`)
+            self.plans = {
+                f"{phase}/{op}": p
+                for phase, plans in self.phase_plans.items()
+                for op, p in plans.items()
+            }
         else:
+            self.model_decode = self.model_prefill = model
+            self.phase_plans = {}
             self.plans = {}
-        self.model = model
+        self.model = self.model_decode
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.greedy = greedy
-        self.state = model.init_decode_state(batch_slots, max_len)
-        self._decode = jax.jit(model.decode_step)
-        self.active: dict[int, dict] = {}
+        self.scheduler = Scheduler(batch_slots, max_len)
+        self.state = self.model_decode.init_decode_state(
+            batch_slots, max_len, per_slot=True)
+        # solo-prefill template: one per-slot row, reused for every prefill
+        self._solo0 = self.model_prefill.init_decode_state(
+            1, max_len, per_slot=True)
+        self._axes = _batch_axes(self.model_decode, batch_slots, max_len)
+        self._prefill = jax.jit(self.model_prefill.decode_step)
+        self._step = jax.jit(self._masked_step)
+        self._scatter = jax.jit(self._scatter_slot)
+        # host-side slot mirrors
+        self._active = np.zeros((batch_slots,), bool)
+        self._last_tok = np.zeros((batch_slots,), np.int32)
+
+    # -- compiled pieces -----------------------------------------------------
+
+    def _masked_step(self, params, tokens, state, active):
+        """One decode token for every slot; rows where ``active`` is False
+        keep their exact prior state (cache, positions, lengths) — finished
+        and empty slots are inert, so a freed slot can be re-filled at any
+        step without touching the others."""
+        logits, new_state = self.model_decode.decode_step(params, tokens, state)
+
+        def sel(ax, new, old):
+            shape = [1] * new.ndim
+            shape[ax] = active.shape[0]
+            return jnp.where(active.reshape(shape), new, old)
+
+        merged = jax.tree.map(sel, self._axes, new_state, state)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), merged
+
+    def _scatter_slot(self, state, solo, slot):
+        """Write a batch-1 per-slot state (a freshly prefilled request) into
+        row ``slot`` of the engine state — the mid-flight join."""
+        return jax.tree.map(
+            lambda ax, s, r: jax.lax.dynamic_update_slice_in_dim(
+                s, r.astype(s.dtype), slot, axis=ax),
+            self._axes, state, solo,
+        )
+
+    # -- streaming API -------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Enqueue a request; it joins a slot on the next ``step()`` with
+        free capacity.  Returns the rid."""
+        rid = self.scheduler.submit(req)
+        self.metrics.on_submit(rid)
+        return rid
+
+    def step(self) -> list[tuple[int, int]]:
+        """Admit waiting requests into free slots (one solo prefill each,
+        emitting the first token), then run one masked batched decode step
+        for every active slot.  Returns this step's (rid, token) events in
+        emission order."""
+        events: list[tuple[int, int]] = []
+        for slot, ticket in self.scheduler.admit():
+            first = self._prefill_slot(slot, ticket)
+            self.metrics.on_first_token(ticket.rid)
+            events.append((ticket.rid, first))
+            self._emit(ticket, slot, first)
+        if self._active.any():
+            next_tok, self.state = self._step(
+                self.params,
+                jnp.asarray(self._last_tok[:, None]),
+                self.state,
+                jnp.asarray(self._active),
+            )
+            self.metrics.on_decode_step(int(self._active.sum()))
+            produced = np.asarray(next_tok)
+            for slot in np.nonzero(self._active)[0]:
+                ticket = self.scheduler.by_slot[int(slot)]
+                tok = int(produced[slot])
+                events.append((ticket.rid, tok))
+                self._emit(ticket, int(slot), tok)
+        return events
+
+    def drain(self) -> dict[int, list[int]]:
+        """Step until queue and slots are empty; returns rid -> tokens for
+        every request completed since construction."""
+        while self.scheduler.has_work():
+            self.step()
+        return {rid: self.scheduler.tickets[rid].tokens
+                for rid in self.scheduler.completed}
+
+    # -- internals -----------------------------------------------------------
+
+    def _prefill_slot(self, slot: int, ticket: Ticket) -> int:
+        logits, solo = self._prefill(
+            self.params, jnp.asarray(ticket.prompt)[None, :], self._solo0)
+        self.state = self._scatter(self.state, solo, jnp.int32(slot))
+        return int(jnp.argmax(logits[0, -1]))
+
+    def _emit(self, ticket: Ticket, slot: int, tok: int) -> None:
+        ticket.tokens.append(tok)
+        self.metrics.on_token(ticket.rid)
+        if len(ticket.tokens) >= ticket.budget:
+            self.scheduler.complete(ticket.rid)
+            self.metrics.on_done(ticket.rid)
+            self._active[slot] = False
+        else:
+            self.scheduler.start_decode(ticket.rid)
+            self._active[slot] = True
+            self._last_tok[slot] = tok
+
+    # -- reporting / compat --------------------------------------------------
 
     def describe_plans(self) -> str:
         if not self.plans:
@@ -74,21 +239,11 @@ class ServeEngine:
         return "\n".join(f"{op}: {p.describe()}" for op, p in self.plans.items())
 
     def generate_batch(self, requests: list[Request]) -> dict[int, list[int]]:
-        """Simple offline batch API: same-length prompts padded to the max,
-        prefill once, then decode until every request hits max_new."""
-        assert len(requests) <= self.slots
-        s_max = max(len(r.prompt) for r in requests)
-        prompts = np.zeros((self.slots, s_max), np.int32)
-        for i, r in enumerate(requests):
-            prompts[i, s_max - len(r.prompt):] = r.prompt  # left-pad
-        logits, self.state = self._decode(self.params, jnp.asarray(prompts), self.state)
-        outputs: dict[int, list[int]] = {r.rid: [] for r in requests}
-        last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        max_new = max(r.max_new for r in requests)
-        for t in range(max_new):
-            for i, r in enumerate(requests):
-                if t < r.max_new:
-                    outputs[r.rid].append(int(last[i]))
-            logits, self.state = self._decode(self.params, last[:, None], self.state)
-            last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return outputs
+        """Offline batch API on top of the streaming engine: submit
+        everything, drain, return each request's tokens.  Unlike the
+        pre-refactor lockstep loop, no request decodes past its own budget
+        and ragged prompts never pollute the KV cache (each prefill runs at
+        true length)."""
+        rids = [self.submit(r) for r in requests]
+        done = self.drain()
+        return {rid: done[rid] for rid in rids}

@@ -1,0 +1,127 @@
+"""Serving metrics: throughput, TTFT, per-request latency, slot occupancy,
+plan-cache hits.
+
+``ServeMetrics`` is pure bookkeeping — the engine calls the ``on_*`` hooks
+and ``summary()`` folds them into one dict.  Slot occupancy is measured over
+*decode steps only* (prefill is per-request work, not slot-array work):
+``occupancy = sum(active slots per step) / (decode steps * slots)`` — the
+fraction of the compiled step's rows doing useful work, the number that says
+whether continuous batching is actually keeping the array full.
+
+Plan-cache numbers are deltas against the engine-construction snapshot, so
+they count only the planning this engine triggered (``repro.plan``
+caches globally).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.plan import plan_cache_stats
+
+
+@dataclasses.dataclass
+class RequestTimes:
+    submit: float
+    first_token: float | None = None
+    done: float | None = None
+    n_tokens: int = 0
+
+
+class ServeMetrics:
+    def __init__(self, slots: int, clock=time.perf_counter):
+        self.slots = slots
+        self.clock = clock
+        self.requests: dict[int, RequestTimes] = {}
+        self.tokens_out = 0
+        self.prefills = 0
+        self.decode_steps = 0
+        self.active_slot_steps = 0  # sum over decode steps of active slots
+        self._t_first_event: float | None = None
+        self._t_last_event: float | None = None
+        snap = plan_cache_stats()
+        self._plan_snap = (snap.hits, snap.misses)
+
+    # -- hooks (called by ServeEngine) --------------------------------------
+
+    def _mark(self) -> float:
+        t = self.clock()
+        if self._t_first_event is None:
+            self._t_first_event = t
+        self._t_last_event = t
+        return t
+
+    def on_submit(self, rid: int) -> None:
+        self.requests[rid] = RequestTimes(submit=self._mark())
+
+    def on_first_token(self, rid: int) -> None:
+        self.prefills += 1
+        self.requests[rid].first_token = self._mark()
+
+    def on_token(self, rid: int) -> None:
+        self.tokens_out += 1
+        self.requests[rid].n_tokens += 1
+
+    def on_decode_step(self, n_active: int) -> None:
+        self.decode_steps += 1
+        self.active_slot_steps += n_active
+        self._mark()
+
+    def on_done(self, rid: int) -> None:
+        self.requests[rid].done = self._mark()
+
+    # -- derived -------------------------------------------------------------
+
+    def ttft(self, rid: int) -> float | None:
+        r = self.requests[rid]
+        return None if r.first_token is None else r.first_token - r.submit
+
+    def latency(self, rid: int) -> float | None:
+        r = self.requests[rid]
+        return None if r.done is None else r.done - r.submit
+
+    @property
+    def occupancy(self) -> float:
+        if not self.decode_steps:
+            return 0.0
+        return self.active_slot_steps / (self.decode_steps * self.slots)
+
+    def plan_cache_delta(self) -> dict:
+        snap = plan_cache_stats()
+        return {
+            "hits": snap.hits - self._plan_snap[0],
+            "misses": snap.misses - self._plan_snap[1],
+            "entries": snap.entries,
+        }
+
+    def summary(self) -> dict:
+        ttfts = [self.ttft(r) for r in self.requests if self.ttft(r) is not None]
+        lats = [self.latency(r) for r in self.requests if self.latency(r) is not None]
+        span = (
+            (self._t_last_event - self._t_first_event)
+            if self._t_first_event is not None and self._t_last_event is not None
+            else 0.0
+        )
+        return {
+            "requests": len(self.requests),
+            "completed": len(lats),
+            "tokens_out": self.tokens_out,
+            "tok_s": self.tokens_out / span if span > 0 else 0.0,
+            "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else None,
+            "latency_mean_s": sum(lats) / len(lats) if lats else None,
+            "decode_steps": self.decode_steps,
+            "occupancy": self.occupancy,
+            "plan_cache": self.plan_cache_delta(),
+        }
+
+    def format_summary(self) -> str:
+        s = self.summary()
+        ttft = f"{s['ttft_mean_s']*1e3:.1f}ms" if s["ttft_mean_s"] is not None else "-"
+        lat = f"{s['latency_mean_s']*1e3:.1f}ms" if s["latency_mean_s"] is not None else "-"
+        pc = s["plan_cache"]
+        return (
+            f"{s['tokens_out']} tokens from {s['completed']}/{s['requests']} "
+            f"requests | {s['tok_s']:.1f} tok/s | ttft {ttft} | latency {lat} "
+            f"| occupancy {s['occupancy']:.2f} over {s['decode_steps']} steps "
+            f"| plan cache +{pc['misses']} plans / {pc['hits']} hits"
+        )

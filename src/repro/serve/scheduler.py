@@ -1,0 +1,154 @@
+"""Request admission and slot lifecycle for continuous batching.
+
+The scheduler owns everything *per-request* and nothing *per-array*: requests
+are submitted into a FIFO admission queue, admitted into free slots of the
+fixed slot array as capacity opens up, and walk the lifecycle
+
+    WAITING -> PREFILL -> DECODE -> DONE
+
+Slot capacity is the only resource: a slot frees the moment its request
+finishes (the masked step engine keeps the freed row inert), so a waiting
+request joins mid-flight on the very next ``ServeEngine.step``.  The decode
+budget is clamped against the KV-cache capacity at submit time (eviction on
+``max_len``): a request whose prompt plus budget would overflow the cache is
+truncated to the tokens that fit, never silently over-decoded.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+# lifecycle states
+WAITING = "WAITING"
+PREFILL = "PREFILL"
+DECODE = "DECODE"
+DONE = "DONE"
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    rid: int = 0
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Per-request scheduler record (request + lifecycle + emitted tokens)."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    budget: int  # max_new clamped to cache capacity (eviction on max_len)
+    state: str = WAITING
+    slot: int = -1
+    tokens: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.state == DONE
+
+
+def ragged_requests(n: int, vocab: int, prompt_len: int, max_new: int,
+                    rng: np.random.Generator) -> list[Request]:
+    """Ragged serving workload shared by the launcher and the serve sweep:
+    prompt lengths U[prompt_len/4 .. prompt_len], decode budgets
+    U[max_new/2 .. max_new], rids 0..n-1."""
+    return [
+        Request(
+            prompt=rng.integers(0, vocab, int(rng.integers(
+                max(prompt_len // 4, 1), prompt_len + 1))).astype(np.int32),
+            max_new=int(rng.integers(max(max_new // 2, 1), max_new + 1)),
+            rid=i,
+        )
+        for i in range(n)
+    ]
+
+
+class Scheduler:
+    def __init__(self, slots: int, max_len: int):
+        if slots < 1:
+            raise ValueError(f"need at least one slot, got {slots}")
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: collections.deque[Ticket] = collections.deque()  # FIFO
+        self.free: collections.deque[int] = collections.deque(range(slots))
+        self.tickets: dict[int, Ticket] = {}  # all rids ever submitted
+        self.by_slot: dict[int, Ticket] = {}  # occupied slots only
+        self.completed: list[int] = []  # rids in completion order
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Enqueue a request (WAITING).  The decode budget is
+        ``min(max_new, max_len - len(prompt) + 1)``: prefill writes the
+        prompt, each decode step past the first token writes one cache row,
+        so this is exactly what fits without overflowing the slot's cache."""
+        n = len(req.prompt)
+        if n < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if n > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {n} exceeds max_len "
+                f"{self.max_len}"
+            )
+        if req.rid in self.tickets:
+            # rids are the keys of every per-request record (tickets,
+            # metrics, drain() output): reuse would silently overwrite the
+            # earlier request's history
+            raise ValueError(f"rid {req.rid} already submitted")
+        budget = max(min(req.max_new, self.max_len - n + 1), 0)
+        t = Ticket(rid=req.rid, prompt=np.asarray(req.prompt, np.int32),
+                   max_new=req.max_new, budget=budget)
+        self.tickets[req.rid] = t
+        self.queue.append(t)
+        return req.rid
+
+    def admit(self) -> list[tuple[int, Ticket]]:
+        """Move waiting requests into free slots, FIFO, until either runs
+        out.  Admitted tickets transition WAITING -> PREFILL."""
+        out = []
+        while self.queue and self.free:
+            t = self.queue.popleft()
+            if t.budget == 0:  # nothing fits: complete immediately, no slot
+                t.state = DONE
+                self.completed.append(t.rid)
+                continue
+            slot = self.free.popleft()
+            t.slot = slot
+            t.state = PREFILL
+            self.by_slot[slot] = t
+            out.append((slot, t))
+        return out
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start_decode(self, rid: int) -> None:
+        self.tickets[rid].state = DECODE
+
+    def complete(self, rid: int) -> None:
+        """DONE: release the slot for the next admission."""
+        t = self.tickets[rid]
+        if t.done:
+            return
+        t.state = DONE
+        self.completed.append(rid)
+        if t.slot >= 0:
+            self.by_slot.pop(t.slot)
+            self.free.append(t.slot)
+            t.slot = -1
+
+    # -- queries -------------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self.by_slot)
+
+    @property
+    def n_active(self) -> int:
+        return len(self.by_slot)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.queue)

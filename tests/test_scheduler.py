@@ -1,0 +1,193 @@
+"""Continuous-batching scheduler + masked step engine: admission order,
+slot reuse, mid-flight joins, decode budgets, metrics."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core.policy import NATIVE_F32
+from repro.models import build_model
+from repro.serve import Request, Scheduler, ServeEngine
+from repro.serve.scheduler import DECODE, DONE, PREFILL, WAITING
+
+
+def _req(rid, n=4, max_new=4, vocab=64, seed=None):
+    rng = np.random.default_rng(rid if seed is None else seed)
+    return Request(prompt=rng.integers(0, vocab, n).astype(np.int32),
+                   max_new=max_new, rid=rid)
+
+
+class TestScheduler:
+    def test_fifo_admission_under_contention(self):
+        s = Scheduler(slots=2, max_len=32)
+        for i in range(5):
+            s.submit(_req(i))
+        first = s.admit()
+        assert [t.rid for _, t in first] == [0, 1]
+        assert s.n_waiting == 3 and not s.free
+        # nothing admits while slots are occupied
+        assert s.admit() == []
+        s.complete(0)
+        assert [t.rid for _, t in s.admit()] == [2]
+        s.complete(1)
+        s.complete(2)
+        assert sorted(t.rid for _, t in s.admit()) == [3, 4]
+
+    def test_slot_reuse_after_completion(self):
+        s = Scheduler(slots=1, max_len=32)
+        s.submit(_req(0))
+        s.submit(_req(1))
+        (slot0, t0), = s.admit()
+        s.complete(0)
+        (slot1, t1), = s.admit()
+        assert slot0 == slot1  # the freed slot is handed to the next request
+        assert t1.rid == 1
+
+    def test_lifecycle_states(self):
+        s = Scheduler(slots=1, max_len=32)
+        s.submit(_req(0))
+        assert s.tickets[0].state == WAITING
+        (_, t), = s.admit()
+        assert t.state == PREFILL
+        s.start_decode(0)
+        assert t.state == DECODE
+        s.complete(0)
+        assert t.state == DONE and t.slot == -1
+        assert not s.has_work()
+
+    def test_budget_clamped_to_max_len(self):
+        # eviction on max_len: prompt 10 + budget must fit a 12-slot cache;
+        # prefill writes 10 rows, each decode step past the first token one
+        # more -> 3 tokens fit (12 - 10 + 1)
+        s = Scheduler(slots=1, max_len=12)
+        s.submit(_req(0, n=10, max_new=50))
+        assert s.tickets[0].budget == 3
+        # a request that already fits is untouched
+        s.submit(_req(1, n=4, max_new=5))
+        assert s.tickets[1].budget == 5
+
+    def test_submit_validation(self):
+        s = Scheduler(slots=1, max_len=8)
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            s.submit(_req(0, n=9))
+        with pytest.raises(ValueError, match="empty prompt"):
+            s.submit(Request(prompt=np.zeros((0,), np.int32), rid=1))
+        s.submit(_req(2))
+        with pytest.raises(ValueError, match="already submitted"):
+            s.submit(_req(2))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: the masked step must be indistinguishable from solo decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_smoke_config("qwen1.5-0.5b").with_policy(NATIVE_F32)
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _solo(model, params, req, max_len=48):
+    eng = ServeEngine(model, params, batch_slots=1, max_len=max_len)
+    return eng.generate_batch([req])[req.rid]
+
+
+class TestContinuousBatching:
+    def test_ragged_batch_matches_solo(self, tiny_model):
+        # satellite regression: mixed prompt lengths through one slot array
+        # must produce exactly the tokens each request gets alone at batch=1
+        cfg, model, params = tiny_model
+        reqs = [_req(0, n=3, max_new=5, vocab=cfg.vocab),
+                _req(1, n=9, max_new=3, vocab=cfg.vocab),
+                _req(2, n=6, max_new=4, vocab=cfg.vocab)]
+        eng = ServeEngine(model, params, batch_slots=3, max_len=48)
+        outs = eng.generate_batch(reqs)
+        for r in reqs:
+            assert outs[r.rid] == _solo(model, params, r), f"rid {r.rid}"
+
+    def test_no_tokens_past_budget(self, tiny_model):
+        # satellite regression: pre-refactor, every request decoded until
+        # max(max_new); now lengths must equal each request's own budget
+        cfg, model, params = tiny_model
+        reqs = [_req(0, n=4, max_new=2, vocab=cfg.vocab),
+                _req(1, n=4, max_new=9, vocab=cfg.vocab),
+                _req(2, n=14, max_new=50, vocab=cfg.vocab)]
+        eng = ServeEngine(model, params, batch_slots=3, max_len=16)
+        outs = eng.generate_batch(reqs)
+        assert len(outs[0]) == 2
+        assert len(outs[1]) == 9
+        assert len(outs[2]) == 3  # evicted at max_len: 16 - 14 + 1
+
+    def test_mid_flight_join_matches_solo(self, tiny_model):
+        cfg, model, params = tiny_model
+        a = _req(0, n=7, max_new=8, vocab=cfg.vocab)
+        b = _req(1, n=4, max_new=5, vocab=cfg.vocab)
+        eng = ServeEngine(model, params, batch_slots=2, max_len=48)
+        eng.submit(a)
+        for _ in range(3):
+            eng.step()  # a is 4 tokens deep when b arrives
+        eng.submit(b)
+        done = eng.drain()
+        assert done[0] == _solo(model, params, a)
+        assert done[1] == _solo(model, params, b)
+
+    def test_more_requests_than_slots_reuses_slots(self, tiny_model):
+        cfg, model, params = tiny_model
+        reqs = [_req(i, n=3 + i, max_new=3, vocab=cfg.vocab) for i in range(5)]
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32)
+        outs = eng.generate_batch(reqs)
+        assert sorted(outs) == [0, 1, 2, 3, 4]
+        for r in reqs:
+            assert outs[r.rid] == _solo(model, params, r, max_len=32)
+        # every slot was recycled: 5 requests through 2 slots
+        assert eng.scheduler.free and len(eng.scheduler.free) == 2
+
+    def test_streaming_events_order_and_content(self, tiny_model):
+        cfg, model, params = tiny_model
+        r = _req(0, n=5, max_new=4, vocab=cfg.vocab)
+        eng = ServeEngine(model, params, batch_slots=1, max_len=32)
+        eng.submit(r)
+        events = []
+        while eng.scheduler.has_work():
+            events.extend(eng.step())
+        assert [rid for rid, _ in events] == [0, 0, 0, 0]
+        assert [t for _, t in events] == _solo(model, params, r, max_len=32)
+
+    def test_metrics_counters(self, tiny_model):
+        cfg, model, params = tiny_model
+        reqs = [_req(i, n=4, max_new=4, vocab=cfg.vocab) for i in range(4)]
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32)
+        outs = eng.generate_batch(reqs)
+        s = eng.metrics.summary()
+        assert s["tokens_out"] == sum(len(v) for v in outs.values()) == 16
+        assert s["requests"] == s["completed"] == 4
+        assert s["decode_steps"] > 0
+        # 4 x 4-token requests through 2 slots: the array stays saturated
+        assert 0.8 < s["occupancy"] <= 1.0
+        assert s["ttft_mean_s"] is not None and s["ttft_mean_s"] > 0
+        assert s["latency_mean_s"] >= s["ttft_mean_s"]
+        for rid in outs:
+            assert eng.metrics.ttft(rid) is not None
+            assert eng.metrics.latency(rid) is not None
+        assert set(s["plan_cache"]) == {"hits", "misses", "entries"}
+
+    def test_per_phase_modes_split_on_boundary(self, tiny_model):
+        # --accuracy spanning a mode boundary: prefill and decode phases
+        # must report different planned modes (run-time reconfiguration
+        # between phases of one workload)
+        cfg, model, params = tiny_model
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32,
+                          accuracy=2.0**-5)
+        pre = eng.phase_plans["prefill"]["mlp_up"].mode
+        dec = eng.phase_plans["decode"]["mlp_up"].mode
+        assert pre != dec
+        assert "prefill/mlp_up" in eng.describe_plans()
+        r = _req(0, n=4, max_new=3, vocab=cfg.vocab)
+        outs = eng.generate_batch([r])
+        assert len(outs[0]) == 3

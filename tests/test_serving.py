@@ -10,7 +10,11 @@ import jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.core.policy import NATIVE_F32
 from repro.models import build_model
-from repro.models.layers import kv_cache_append, kv_cache_init
+from repro.models.layers import (
+    kv_cache_append,
+    kv_cache_append_slots,
+    kv_cache_init,
+)
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -45,6 +49,37 @@ class TestKVCache:
         assert int(c.length) == 10
         np.testing.assert_array_equal(np.asarray(c.pos), [6, 7, 8, 9])
         np.testing.assert_allclose(np.asarray(c.k[0, :, 0, 0], np.float32), [6, 7, 8, 9])
+
+    def test_per_slot_append_independent_offsets(self):
+        # continuous-batching layout: rows at different depths append at
+        # their own ring offsets in one call
+        c = kv_cache_init(2, 4, 1, 2, "bfloat16", per_slot=True)
+        assert c.pos.shape == (2, 4) and c.length.shape == (2,)
+        # advance row 1 by two tokens first (mask row 0 by re-selecting it)
+        for t in range(2):
+            nxt = kv_cache_append_slots(
+                c, jnp.full((2, 1, 1, 2), t, jnp.float32), jnp.zeros((2, 1, 1, 2))
+            )
+            c = jax.tree.map(  # freeze row 0, keep row 1 — the engine's mask
+                lambda n, o: jnp.concatenate([o[:1], n[1:]]), nxt, c)
+        np.testing.assert_array_equal(np.asarray(c.length), [0, 2])
+        c = kv_cache_append_slots(
+            c, jnp.full((2, 1, 1, 2), 9, jnp.float32), jnp.zeros((2, 1, 1, 2))
+        )
+        np.testing.assert_array_equal(np.asarray(c.length), [1, 3])
+        np.testing.assert_array_equal(np.asarray(c.pos),
+                                      [[0, -1, -1, -1], [0, 1, 2, -1]])
+        np.testing.assert_allclose(np.asarray(c.k[0, 0, 0, 0], np.float32), 9)
+        np.testing.assert_allclose(np.asarray(c.k[1, 2, 0, 0], np.float32), 9)
+
+    def test_per_slot_ring_wrap(self):
+        c = kv_cache_init(1, 4, 1, 2, "bfloat16", per_slot=True)
+        for t in range(6):
+            c = kv_cache_append_slots(
+                c, jnp.full((1, 1, 1, 2), t, jnp.float32), jnp.zeros((1, 1, 1, 2))
+            )
+        assert sorted(np.asarray(c.pos[0]).tolist()) == [2, 3, 4, 5]
+        assert int(c.length[0]) == 6
 
     def test_int8_roundtrip_error(self, rng):
         c = kv_cache_init(1, 8, 2, 16, "int8")
