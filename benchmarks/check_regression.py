@@ -1,0 +1,199 @@
+"""CI perf-regression gate: fresh sweep results vs committed BENCH baselines.
+
+Compares a freshly generated ``BENCH_plan.json`` / ``BENCH_serve.json``
+against the committed baselines and fails (exit 1) when any overlapping
+cell regresses by more than the tolerance.  Three comparison layers, by
+noise profile:
+
+* **plan selections** (``--plan-mode selections``, the CI default): the
+  planner's estimated time for its own pick per (backend, size, accuracy)
+  cell.  Deterministic — a regression here means the planner or cost model
+  got worse, not that the runner was busy — so the 25% tolerance is exact.
+* **serve throughput** (tok/s per (slots, accuracy) cell): a multi-second
+  aggregate over thousands of decode steps; stable enough on shared
+  runners to gate wall clock at 25%.
+* **plan measured** (``--plan-mode measured``): per-cell kernel
+  microbenchmarks (~ms).  Too contention-sensitive for hosted CI at tight
+  tolerances — meant for same-machine, before/after comparisons (pair with
+  ``plan_sweep --stat min``).
+
+CI runners are not the machine the baselines were measured on, so
+wall-clock comparisons are **normalized**: each cell's cost ratio
+``new / baseline`` is computed (cost = 1/tok_s for serve, wall for plan
+measured), the median ratio is the machine-speed factor, and a cell
+regresses when its ratio exceeds ``median * (1 + tolerance)``.  A
+uniformly slower machine passes; a *relative* regression survives
+normalization.  ``--absolute`` disables normalization (same-machine use).
+
+    python -m benchmarks.check_regression \\
+        --plan-baseline BENCH_plan.json --plan-new /tmp/BENCH_plan.json \\
+        --serve-baseline BENCH_serve.json --serve-new /tmp/BENCH_serve.json \\
+        --tolerance 0.25
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def plan_cells(doc: dict) -> dict[tuple, float]:
+    """Measured plan-sweep cells -> wall_us, keyed (n, impl, mode, depth)."""
+    return {
+        (r["n"], r["impl"], r["mode"], r["depth"]): float(r["wall_us"])
+        for r in doc.get("measured", [])
+        if r.get("wall_us", 0) > 0
+    }
+
+
+def plan_selection_cells(doc: dict) -> dict[tuple, float]:
+    """Planner-selection cells -> the pick's estimated time in us, keyed
+    (backend, n, accuracy).  Deterministic model output: any drift is a
+    code change, not machine noise."""
+    out = {}
+    for backend, recs in doc.get("planner", {}).items():
+        for r in recs:
+            out[(backend, r["n"], f"{r['accuracy']:.3e}")] = float(r["est_t_us"])
+    return out
+
+
+def serve_cells(doc: dict) -> dict[tuple, float]:
+    """Serve-sweep cells -> seconds-per-token, keyed (slots, accuracy)."""
+    out = {}
+    for c in doc.get("cells", []):
+        if c.get("tok_s", 0) <= 0:
+            continue
+        acc = "unplanned" if c["accuracy"] is None else f"{c['accuracy']:.3e}"
+        out[(c["slots"], acc)] = 1.0 / float(c["tok_s"])
+    return out
+
+
+def compare(
+    baseline: dict[tuple, float],
+    new: dict[tuple, float],
+    *,
+    tolerance: float,
+    absolute: bool = False,
+    min_cells: int = 2,
+) -> dict:
+    """Compare cost dicts (lower is better).  Returns a report dict with
+    ``violations``; raises ValueError on insufficient overlap."""
+    common = sorted(set(baseline) & set(new))
+    if len(common) < min_cells:
+        raise ValueError(
+            f"only {len(common)} overlapping cells (need >= {min_cells}); "
+            "baseline and new sweep grids do not overlap enough to gate on"
+        )
+    ratios = {key: new[key] / baseline[key] for key in common}
+    ordered = sorted(ratios.values())
+    mid = len(ordered) // 2
+    if absolute:
+        speed_factor = 1.0
+    elif len(ordered) % 2:
+        speed_factor = ordered[mid]
+    else:
+        speed_factor = 0.5 * (ordered[mid - 1] + ordered[mid])
+    limit = speed_factor * (1.0 + tolerance)
+    violations = [
+        {"cell": list(key), "ratio": ratios[key], "limit": limit}
+        for key in common
+        if ratios[key] > limit
+    ]
+    violations.sort(key=lambda v: -v["ratio"])
+    return {
+        "n_cells": len(common),
+        "speed_factor": speed_factor,
+        "limit": limit,
+        "violations": violations,
+    }
+
+
+def _gate(name: str, baseline_cells, new_cells, args, absolute=None) -> bool:
+    try:
+        report = compare(
+            baseline_cells,
+            new_cells,
+            tolerance=args.tolerance,
+            absolute=args.absolute if absolute is None else absolute,
+            min_cells=args.min_cells,
+        )
+    except ValueError as e:
+        print(f"{name}: ERROR {e}")
+        return False
+    print(
+        f"{name}: {report['n_cells']} cells, machine-speed factor "
+        f"{report['speed_factor']:.3f}, per-cell limit {report['limit']:.3f}"
+    )
+    for v in report["violations"]:
+        print(
+            f"  REGRESSION {v['cell']}: cost ratio {v['ratio']:.3f} "
+            f"> {v['limit']:.3f}"
+        )
+    if not report["violations"]:
+        print(f"  ok (worst within {args.tolerance:.0%} of the median ratio)")
+    return not report["violations"]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--plan-baseline", default="")
+    ap.add_argument("--plan-new", default="")
+    ap.add_argument(
+        "--plan-mode",
+        default="selections",
+        choices=("selections", "measured"),
+        help="plan comparison layer: deterministic planner selections "
+        "(CI) or wall-clock kernel cells (same-machine)",
+    )
+    ap.add_argument("--serve-baseline", default="")
+    ap.add_argument("--serve-new", default="")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed per-cell cost-ratio excess over the median ratio",
+    )
+    ap.add_argument(
+        "--absolute",
+        action="store_true",
+        help="skip machine-speed normalization (same-machine comparisons)",
+    )
+    ap.add_argument("--min-cells", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    ran = False
+    ok = True
+    if args.plan_baseline and args.plan_new:
+        ran = True
+        selections = args.plan_mode == "selections"
+        cells = plan_selection_cells if selections else plan_cells
+        ok &= _gate(
+            f"plan ({args.plan_mode})",
+            cells(load(args.plan_baseline)),
+            cells(load(args.plan_new)),
+            args,
+            # model output vs model output: no machine-speed factor to cancel
+            absolute=True if selections else None,
+        )
+    if args.serve_baseline and args.serve_new:
+        ran = True
+        ok &= _gate(
+            "serve",
+            serve_cells(load(args.serve_baseline)),
+            serve_cells(load(args.serve_new)),
+            args,
+        )
+    if not ran:
+        print("nothing to compare: pass --plan-baseline/--plan-new and/or --serve-*")
+        return 2
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,15 @@
 """Regenerate the EXPERIMENTS.md generated tables: the planner sweep from
-BENCH_plan.json (benchmarks/plan_sweep.py), the serve sweep from
-BENCH_serve.json (benchmarks/serve_sweep.py) and, when present, the dry-run
-+ roofline tables from experiments/dryrun/*.json.
+BENCH_plan.json (benchmarks/plan_sweep.py), the tuner's measured-vs-modeled
+comparison from BENCH_tune.json (benchmarks/tune_sweep.py), the serve sweep
+from BENCH_serve.json (benchmarks/serve_sweep.py) and, when present, the
+dry-run + roofline tables from experiments/dryrun/*.json.
 
     PYTHONPATH=src python -m benchmarks.plan_sweep          # produce BENCH_plan.json
     PYTHONPATH=src python -m benchmarks.serve_sweep         # produce BENCH_serve.json
     PYTHONPATH=src python -m benchmarks.make_experiments_md --write
     #   ^ refreshes the generated block of EXPERIMENTS.md in place
+    PYTHONPATH=src python -m benchmarks.make_experiments_md --check
+    #   ^ exit 1 if the generated block is stale vs the committed BENCH_*.json
     PYTHONPATH=src python -m benchmarks.make_experiments_md > tables.md  # stdout only
 """
 from __future__ import annotations
@@ -18,6 +21,7 @@ import sys
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 BENCH_PLAN = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
+BENCH_TUNE = os.path.join(os.path.dirname(__file__), "..", "BENCH_tune.json")
 BENCH_SERVE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
 BEGIN_MARK = "<!-- BEGIN GENERATED (benchmarks/make_experiments_md.py) -->"
@@ -154,6 +158,65 @@ def plan_selection_table(doc: dict) -> list[str]:
     return out
 
 
+# --------------------------------------------------------------------------
+# Tuner tables (BENCH_tune.json, benchmarks/tune_sweep.py)
+# --------------------------------------------------------------------------
+
+
+def load_bench_tune(path: str = BENCH_TUNE) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt_pick(p: dict) -> str:
+    blk = ""
+    if p.get("block"):
+        blk = " b" + "x".join(str(x) for x in p["block"])
+    return f"{p['mode']}/{p['impl']}/d{p['depth']}{blk}"
+
+
+def tune_comparison_table(doc: dict) -> list[str]:
+    out = ["| n | accuracy | modeled pick | modeled t | tuned pick | tuned t | source | agree |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in doc.get("comparison", []):
+        mo, tu = r["modeled"], r["tuned"]
+        out.append(
+            f"| {r['n']} | {r['accuracy']:.1e} | {_fmt_pick(mo)} "
+            f"| {fmt_s(mo['t_us'] * 1e-6)} | {_fmt_pick(tu)} "
+            f"| {fmt_s(tu['t_us'] * 1e-6)} | {tu['source']} "
+            f"| {'yes' if r['agree'] else '**no**'} |"
+        )
+    return out
+
+
+def tune_section() -> list[str]:
+    doc = load_bench_tune()
+    if doc is None:
+        return ["### Measured vs modeled\n",
+                "_BENCH_tune.json not found — run "
+                "`python -m benchmarks.tune_sweep` first._\n"]
+    bal = doc["balance"]
+    n_disagree = sum(1 for r in doc.get("comparison", []) if not r["agree"])
+    parts = [
+        f"### Measured vs modeled (BENCH_tune.json, host={doc['host_backend']}, "
+        f"table={doc['table_backend']}@{doc['table_fingerprint'][:8]}, "
+        f"{doc['n_records']} records)\n",
+        "Autotuner (`repro.tune`) measurements vs the static roofline: what "
+        "`plan_matmul` picks pure-roofline vs pointed at the measured table "
+        f"({n_disagree} disagreement(s) — the cells the roofline gets wrong "
+        "on this host).  Fitted machine balance "
+        f"peak={bal['fitted_peak_flops']:.3g} FLOP/s, "
+        f"bw={bal['fitted_hbm_bw']:.3g} B/s "
+        f"(hand-entered defaults: {bal['default_peak_flops']:.3g} / "
+        f"{bal['default_hbm_bw']:.3g}):\n",
+        "\n".join(tune_comparison_table(doc)),
+        "",
+    ]
+    return parts
+
+
 def load_bench_serve(path: str = BENCH_SERVE) -> dict | None:
     if not os.path.exists(path):
         return None
@@ -215,6 +278,7 @@ def generated_sections() -> str:
         parts.append("### Plan sweep\n")
         parts.append("_BENCH_plan.json not found — run "
                      "`python -m benchmarks.plan_sweep` first._\n")
+    parts.extend(tune_section())
     parts.extend(serve_section())
     recs = load("paper_baseline")
     if recs:
@@ -234,8 +298,8 @@ def generated_sections() -> str:
     return "\n".join(parts).rstrip() + "\n"
 
 
-def write_experiments_md(path: str = EXPERIMENTS_MD) -> None:
-    """Replace the marked generated block of EXPERIMENTS.md in place."""
+def _rendered(path: str = EXPERIMENTS_MD) -> tuple[str, str]:
+    """(current file text, text with a freshly generated block)."""
     with open(path) as f:
         text = f.read()
     if BEGIN_MARK not in text or END_MARK not in text:
@@ -243,9 +307,33 @@ def write_experiments_md(path: str = EXPERIMENTS_MD) -> None:
     head, rest = text.split(BEGIN_MARK, 1)
     _, tail = rest.split(END_MARK, 1)
     new = head + BEGIN_MARK + "\n" + generated_sections() + END_MARK + tail
+    return text, new
+
+
+def write_experiments_md(path: str = EXPERIMENTS_MD) -> None:
+    """Replace the marked generated block of EXPERIMENTS.md in place."""
+    _, new = _rendered(path)
     with open(path, "w") as f:
         f.write(new)
     print(f"refreshed generated block of {path}")
+
+
+def check_experiments_md(path: str = EXPERIMENTS_MD) -> bool:
+    """True iff the generated block matches the committed BENCH_*.json —
+    the CI docs-drift gate (exit 1 via main when stale)."""
+    current, fresh = _rendered(path)
+    if current == fresh:
+        print(f"{path} generated block is up to date")
+        return True
+    cur_lines = current.splitlines()
+    new_lines = fresh.splitlines()
+    n_diff = sum(1 for a, b in zip(cur_lines, new_lines) if a != b)
+    n_diff += abs(len(cur_lines) - len(new_lines))
+    print(
+        f"{path} generated block is STALE ({n_diff} line(s) differ): run "
+        "`python -m benchmarks.make_experiments_md --write` and commit"
+    )
+    return False
 
 
 def main() -> None:
@@ -253,6 +341,8 @@ def main() -> None:
     if "--write" in argv:
         write_experiments_md()
         return
+    if "--check" in argv:
+        sys.exit(0 if check_experiments_md() else 1)
     policy = argv[0] if argv else "paper_baseline"
     doc = load_bench_plan()
     if doc is not None:
@@ -260,6 +350,7 @@ def main() -> None:
         if doc.get("measured"):
             print("\n".join(plan_measured_table(doc)) + "\n")
         print("\n".join(plan_selection_table(doc)) + "\n")
+    print("\n".join(tune_section()) + "\n")
     print("\n".join(serve_section()) + "\n")
     recs = load(policy)
     n_ok = sum(1 for r in recs.values() if r["status"] == "ok")

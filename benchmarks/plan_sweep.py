@@ -27,7 +27,7 @@ import numpy as np
 
 from benchmarks.common import timeit
 from repro.core.precision import MODE_PASSES, Mode
-from repro.plan import estimate, execute, plan_matmul
+from repro.plan import estimate, plan_matmul
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
 
@@ -38,7 +38,7 @@ ACCURACIES = (2.0**-4, 2.0**-12, 2.0**-20)
 
 
 def sweep_cell(n: int, mode: Mode, impl: str, depth: int, iters: int,
-               rng: np.random.Generator) -> dict:
+               rng: np.random.Generator, stat: str = "median") -> dict:
     a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
     b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
 
@@ -48,7 +48,7 @@ def sweep_cell(n: int, mode: Mode, impl: str, depth: int, iters: int,
         return mp_matmul(x, y, mode, impl=impl, strassen_depth=depth)
 
     fn = jax.jit(run)
-    us = timeit(fn, a, b, warmup=1, iters=iters)
+    us = timeit(fn, a, b, warmup=1, iters=iters, stat=stat)
     out = np.asarray(fn(a, b), np.float64)
     ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
     rel = float(np.abs(out - ref).max() / np.abs(ref).max())
@@ -72,8 +72,11 @@ def planner_selections(sizes, backend: str) -> list[dict]:
     recs = []
     for n in sizes:
         for acc in ACCURACIES:
+            # tune_table=False: the baseline must be the pure cost model —
+            # an ambient TUNE_TABLE env var must not leak into the committed
+            # BENCH_plan.json the CI perf-gate compares against
             p = plan_matmul((n, n), (n, n), accuracy=acc, backend=backend,
-                            max_depth=2)
+                            max_depth=2, tune_table=False)
             recs.append({
                 "n": n,
                 "accuracy": acc,
@@ -95,6 +98,8 @@ def main() -> None:
     ap.add_argument("--out", default=OUT)
     ap.add_argument("--skip-measure", action="store_true",
                     help="planner selections only (fast)")
+    ap.add_argument("--stat", default="median", choices=("median", "min"),
+                    help="per-cell statistic; 'min' is load-robust (CI gate)")
     args = ap.parse_args()
     sizes = tuple(int(s) for s in args.sizes.split(","))
     rng = np.random.default_rng(0)
@@ -109,7 +114,8 @@ def main() -> None:
                     for depth in DEPTHS:
                         if n // (2**depth) < 64:
                             continue
-                        rec = sweep_cell(n, mode, impl, depth, args.iters, rng)
+                        rec = sweep_cell(n, mode, impl, depth, args.iters, rng,
+                                         stat=args.stat)
                         measured.append(rec)
                         print(
                             f"n={n} {impl}/{mode.name}/d{depth}: "
@@ -119,6 +125,7 @@ def main() -> None:
 
     doc = {
         "host_backend": jax.default_backend(),
+        "stat": args.stat,
         "sizes": sizes,
         "measured": measured,
         "planner": {

@@ -52,6 +52,9 @@ def sweep_cell(model, params, slots: int, accuracy: float | None,
         model, params, batch_slots=slots,
         max_len=prompt_len + max_new + 8,
         accuracy=accuracy, prefill_tokens=max(prompt_len // 2, 1),
+        # pure-roofline plans: BENCH_serve.json is a CI baseline and must not
+        # depend on whether a TUNE_TABLE env var happened to be set
+        tune_table=False,
     )
     t0 = time.perf_counter()
     for r in reqs:

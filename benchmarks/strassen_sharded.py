@@ -10,13 +10,13 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core.strassen import strassen_matmul
-from repro.launch.hlo_cost import PEAK_FLOPS, parse_hlo_cost
-from repro.launch.mesh import make_production_mesh
+from repro.core.strassen import strassen_matmul  # noqa: E402
+from repro.launch.hlo_cost import PEAK_FLOPS, parse_hlo_cost  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 
 def main() -> None:
@@ -28,7 +28,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     base = None
     for depth in (0, 1, 2):
-        fn = lambda x, y, d=depth: strassen_matmul(x, y, depth=d, align=128)
+        def fn(x, y, d=depth):
+            return strassen_matmul(x, y, depth=d, align=128)
+
         with jax.set_mesh(mesh):
             compiled = (
                 jax.jit(fn, in_shardings=(sh_a, sh_b)).lower(a, a).compile()

@@ -1,0 +1,114 @@
+"""Autotuner sweep: measure the candidate space, fit the machine balance,
+and record where measurement disagrees with the roofline model.
+
+For every (size, accuracy) cell the sweep plans the matmul twice — pure
+roofline (``tune_table=False``) and against the measured table — and records
+both picks, the resolution source, and whether they agree.  The output,
+``BENCH_tune.json``, feeds the "Measured vs modeled" table in EXPERIMENTS.md
+(via ``python -m benchmarks.make_experiments_md --write``).
+
+    PYTHONPATH=src python -m benchmarks.tune_sweep                  # measure fresh
+    PYTHONPATH=src python -m benchmarks.tune_sweep --table tuning/cpu.json
+    #   ^ reuse a committed table instead of re-measuring
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.plan import DEFAULT_BALANCE, plan_matmul
+from repro.tune import TuneTable, tune
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_tune.json")
+
+ACCURACIES = (2.0**-4, 2.0**-12, 2.0**-20)
+
+
+def _pick(plan) -> dict:
+    return {
+        "mode": plan.mode.name,
+        "impl": plan.impl,
+        "depth": plan.strassen_depth,
+        "source": plan.source,
+        "t_us": round(plan.t_resolved_s * 1e6, 2),
+        "block": list(plan.block) if plan.block else None,
+    }
+
+
+def comparison(table: TuneTable, sizes, backend: str, max_depth: int) -> list[dict]:
+    rows = []
+    for n in sizes:
+        for acc in ACCURACIES:
+            kwargs = dict(accuracy=acc, backend=backend, max_depth=max_depth)
+            modeled = plan_matmul((n, n), (n, n), tune_table=False, **kwargs)
+            tuned = plan_matmul((n, n), (n, n), tune_table=table, **kwargs)
+            rows.append(
+                {
+                    "n": n,
+                    "accuracy": acc,
+                    "modeled": _pick(modeled),
+                    "tuned": _pick(tuned),
+                    "agree": (modeled.mode, modeled.impl, modeled.strassen_depth)
+                    == (tuned.mode, tuned.impl, tuned.strassen_depth),
+                }
+            )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default="128,256,512")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--max-depth", type=int, default=1)
+    ap.add_argument(
+        "--table",
+        default="",
+        help="reuse an existing tuning table instead of measuring",
+    )
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+
+    if args.table:
+        table = TuneTable.load(args.table)
+        sizes = tuple(sorted({r.m for r in table.records}))
+    else:
+        table = tune(
+            sizes,
+            max_depth=args.max_depth,
+            iters=args.iters,
+            progress=lambda line: print(line, flush=True),
+        )
+    bal = table.balance
+    rows = comparison(table, sizes, table.backend, args.max_depth)
+    n_disagree = sum(1 for r in rows if not r["agree"])
+    doc = {
+        "host_backend": jax.default_backend(),
+        "table_backend": table.backend,
+        "table_fingerprint": table.fingerprint,
+        "sizes": list(sizes),
+        "n_records": len(table.records),
+        "balance": {
+            "fitted_peak_flops": bal.peak_flops,
+            "fitted_hbm_bw": bal.hbm_bw,
+            "default_peak_flops": DEFAULT_BALANCE.peak_flops,
+            "default_hbm_bw": DEFAULT_BALANCE.hbm_bw,
+        },
+        "records": [r.to_json() for r in table.records],
+        "comparison": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(
+        f"wrote {args.out}: {len(table.records)} records, "
+        f"{len(rows)} comparison cells, {n_disagree} measured-vs-modeled "
+        "disagreements"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -54,7 +54,7 @@ out = mp_matmul(a, b, Mode.M16, strassen_depth=1)
 print(f"  Strassen OUTSIDE x RMPM M16 INSIDE (the paper's full stack): rel_err={rel_err(out):.2e}")
 
 print("=== the planner: shape + accuracy -> (mode, depth, impl) ===")
-from repro.plan import matmul as planned_matmul, plan_matmul
+from repro.plan import matmul as planned_matmul, plan_matmul  # noqa: E402
 
 for n, acc in ((256, 2**-4), (4096, 2**-12), (16384, 2**-20)):
     p = plan_matmul((n, n), (n, n), accuracy=acc, backend="tpu")

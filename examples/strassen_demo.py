@@ -20,7 +20,9 @@ print(f"paper config: {paper_4x4.MATRIX_SIZE}x{paper_4x4.MATRIX_SIZE} matrix, "
 print(f"leaf products: {leaf_products(paper_4x4.STRASSEN_DEPTH)} (classical would use 8)")
 
 for mode in (Mode.M8, Mode.M16, Mode.M24):
-    leaf = lambda x, y, m=mode: mp_matmul(x, y, m)
+    def leaf(x, y, m=mode):
+        return mp_matmul(x, y, m)
+
     out = strassen_matmul(A, B, depth=paper_4x4.STRASSEN_DEPTH, leaf_fn=leaf, align=2)
     err = np.abs(np.asarray(out, np.float64) - exact).max()
     print(f"  PE mode {mode.name}: max abs err = {err:.2e}")

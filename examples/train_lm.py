@@ -11,7 +11,6 @@ import argparse
 import shutil
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
@@ -19,7 +18,6 @@ from repro.configs import get_config
 from repro.core.policy import PRESETS
 from repro.data.pipeline import SyntheticLM
 from repro.models import build_model
-from repro.models.config import reduce_for_smoke
 from repro.optim import adamw
 from repro.train.loop import LoopConfig, resume_or_init, train_loop
 from repro.train.step import TrainConfig, init_train_state, make_train_step
@@ -65,7 +63,6 @@ def main():
     n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
     print(f"model: {n_params/1e6:.1f}M params, policy={cfg.policy.describe()}")
 
-    losses = []
     state, history = train_loop(
         train_step, state, data,
         LoopConfig(total_steps=args.steps, checkpoint_every=100, log_every=20),

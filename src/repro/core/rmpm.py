@@ -170,21 +170,32 @@ def mp_matmul(
     rounding: str = "rne",
     impl: str = "xla",
     strassen_depth: int = 0,
+    block: tuple[int, int, int] | None = None,
 ) -> Array:
     """Multi-precision matmul: a (..., K) @ b (K, N) -> (..., N) f32.
 
     ``strassen_depth > 0`` routes through the paper's top-down Strassen block
-    recursion (C4) with this engine at the leaves.
+    recursion (C4) with this engine at the leaves.  ``block`` overrides the
+    Pallas kernel's (bm, bn, bk) tile sizes — the autotuner's fourth lever
+    (repro.tune); it is ignored by the non-Pallas impls, whose tiling XLA
+    owns.
     """
     mode = Mode(mode)
     if strassen_depth > 0:
         from repro.core import strassen as strassen_lib  # local import (cycle)
 
-        leaf = functools.partial(mp_matmul, mode=mode, rounding=rounding, impl=impl)
+        leaf = functools.partial(
+            mp_matmul, mode=mode, rounding=rounding, impl=impl, block=block
+        )
         return strassen_lib.strassen_matmul(a, b, depth=strassen_depth, leaf_fn=leaf)
     if impl == "pallas":
         from repro.kernels.limb_matmul import ops as limb_ops
 
+        if block is not None:
+            bm, bn, bk = block
+            return limb_ops.limb_matmul(
+                a, b, MODE_LIMBS[mode], rounding=rounding, bm=bm, bn=bn, bk=bk
+            )
         return limb_ops.limb_matmul(a, b, MODE_LIMBS[mode], rounding=rounding)
     shape_a = a.hi.shape if isinstance(a, DoubleF32) else a.shape
     if len(shape_a) == 2:

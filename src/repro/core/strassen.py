@@ -52,7 +52,9 @@ def _strassen(a: Array, b: Array, depth: int, leaf_fn: LeafFn) -> Array:
     b11, b12 = b[:kh, :nh], b[:kh, nh:]
     b21, b22 = b[kh:, :nh], b[kh:, nh:]
 
-    rec = lambda x, y: _strassen(x, y, depth - 1, leaf_fn)
+    def rec(x, y):
+        return _strassen(x, y, depth - 1, leaf_fn)
+
     # Paper Eq. (2): the seven partial products S1..S7.
     s1 = rec(a11 + a22, b11 + b22)
     s2 = rec(a21 + a22, b11)

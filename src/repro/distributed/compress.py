@@ -13,7 +13,6 @@ int8 + f32 scales between pods when it materializes the reduction).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -17,7 +17,6 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 BATCH_AXES = ("pod", "data")
@@ -190,7 +189,7 @@ def param_shardings(params_shape: Any, cfg, mesh) -> Any:
         return jax.NamedSharding(mesh, _fit_spec(axes, leaf.shape, mesh))
 
     flat = dict(_tree_paths(params_shape))
-    return _rebuild(params_shape, {p: one(p, l) for p, l in flat.items()})
+    return _rebuild(params_shape, {p: one(p, leaf) for p, leaf in flat.items()})
 
 
 def _is_stacked(path: str, leaf, cfg) -> bool:

@@ -16,18 +16,18 @@ Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>[__<policy>].json wit
 memory_analysis, scan-corrected HLO cost, collective breakdown and roofline
 terms.  Failures (sharding mismatch, OOM at compile) are bugs — fix, re-run.
 """
-import argparse
-import json
-import time
-import traceback
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
 
-import jax
+import jax  # noqa: E402
 
-from repro.configs import ARCH_IDS, get_config
-from repro.core.policy import PRESETS
-from repro.launch import hlo_cost
-from repro.launch.mesh import make_production_mesh
-from repro.launch.shapes import (
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.core.policy import PRESETS  # noqa: E402
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shapes import (  # noqa: E402
     SHAPES,
     build_cell,
     cell_applicable,

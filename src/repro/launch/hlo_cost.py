@@ -19,7 +19,6 @@ Shapes in post-partitioning HLO are per-device, so all totals are per-device.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict
 

@@ -67,6 +67,10 @@ def main() -> None:
     ap.add_argument("--accuracy", type=float, default=None,
                     help="plan per-phase precision for this relative-error "
                          "budget instead of using the --policy preset modes")
+    ap.add_argument("--tune-table", default="",
+                    help="measured-cost tuning table (file or directory, "
+                         "repro.tune) for the per-phase planner; empty = "
+                         "TUNE_TABLE env var, then pure roofline")
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -91,6 +95,7 @@ def main() -> None:
         model, params, batch_slots=slots, max_len=max_len,
         accuracy=args.accuracy,
         prefill_tokens=max(args.prompt_len // 2, 1),
+        tune_table=args.tune_table or None,
     )
     t0 = time.perf_counter()
     outs = run_open_loop(eng, reqs, args.arrival_rate, rng)

@@ -19,7 +19,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.policy import PRESETS
 from repro.data.pipeline import Prefetcher, SyntheticLM
-from repro.distributed.sharding import input_shardings, param_shardings, replicated
+from repro.distributed.sharding import param_shardings, replicated
 from repro.models import build_model
 from repro.optim import adamw
 from repro.train.loop import LoopConfig, resume_or_init, train_loop
@@ -42,6 +42,12 @@ def main() -> None:
              "planner (repro.plan) derives the precision policy from the "
              "cost model instead of --policy",
     )
+    ap.add_argument(
+        "--tune-table", default="",
+        help="measured-cost tuning table (file or directory, repro.tune) "
+             "the planner resolves against; empty = TUNE_TABLE env var, "
+             "then pure roofline",
+    )
     ap.add_argument("--mesh", default="", help="e.g. '4,2' for (data=4, model=2)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
@@ -53,7 +59,8 @@ def main() -> None:
         from repro.plan import plan_model_policy
 
         planned, plans = plan_model_policy(
-            cfg, tokens=args.batch * args.seq, accuracy=args.accuracy
+            cfg, tokens=args.batch * args.seq, accuracy=args.accuracy,
+            tune_table=args.tune_table or None,
         )
         cfg = cfg.with_policy(planned)
         print(f"planned policy ({args.accuracy:.1e} budget): {planned.describe()}")

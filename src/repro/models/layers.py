@@ -133,12 +133,17 @@ def kv_cache_init(batch: int, s_max: int, n_kv: int, hd: int, dtype: str,
     else:
         pos = jnp.full((s_max,), -1, jnp.int32)
         length = jnp.int32(0)
+
+    def z(dt):
+        # distinct buffers per call: k/v must never alias (donation)
+        return jnp.zeros((batch, s_max, n_kv, hd), dt)
+
     if dtype == "int8":
-        z = lambda: jnp.zeros((batch, s_max, n_kv, hd), jnp.int8)
-        s = lambda: jnp.zeros((batch, s_max, n_kv, 1), jnp.float32)
-        return KVCache(z(), z(), s(), s(), pos, length)
-    z = lambda: jnp.zeros((batch, s_max, n_kv, hd), jnp.bfloat16)
-    return KVCache(z(), z(), None, None, pos, length)
+        def s():
+            return jnp.zeros((batch, s_max, n_kv, 1), jnp.float32)
+
+        return KVCache(z(jnp.int8), z(jnp.int8), s(), s(), pos, length)
+    return KVCache(z(jnp.bfloat16), z(jnp.bfloat16), None, None, pos, length)
 
 
 def stack_tree(n: int, tree):
@@ -276,7 +281,9 @@ def flash_attention(
     n_chunks = -(-skv // chunk)
     pad = n_chunks * chunk - skv
     if pad:
-        padded = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        def padded(x):
+            return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
         k, v = padded(k), padded(v)
         if k_scale is not None:
             k_scale, v_scale = padded(k_scale), padded(v_scale)
@@ -303,7 +310,7 @@ def flash_attention(
     vsc = v_scale.reshape(b, n_chunks, chunk, hkv, 1) if v_scale is not None else None
 
     def step(carry, ci):
-        m, l, acc = carry
+        m, lse, acc = carry
         kt = _dequant_chunk(
             jax.lax.dynamic_index_in_dim(kc, ci, 1, keepdims=False),
             jax.lax.dynamic_index_in_dim(ksc, ci, 1, keepdims=False) if ksc is not None else None,
@@ -328,7 +335,7 @@ def flash_attention(
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + p.sum(axis=-1)
+        l_new = lse * alpha + p.sum(axis=-1)
         pv = pein("bhgqk,bkhd->bhgqd", p, vt, "attn_av", policy)
         acc_new = acc * alpha[..., None] + pv
         return (m_new, l_new, acc_new), None
@@ -336,8 +343,8 @@ def flash_attention(
     m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
     a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, lse, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(lse, 1e-30)[..., None]
     # (B,Hkv,G,Sq,hd) -> (B,Sq,Hq,hd)
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
 

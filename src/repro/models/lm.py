@@ -8,7 +8,6 @@ optional remat — essential for compile time at 512 devices.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -224,11 +223,9 @@ class LanguageModel:
                     jax.random.split(seg_keys[si], n), _block_init, cfg, kd
                 )
         if cfg.family == "encdec":
-            enc_cfg = dataclasses.replace(cfg, n_layers=cfg.n_encoder_layers)
             params["enc_layers"] = stacked(
                 jax.random.split(k_enc, cfg.n_encoder_layers), _block_init, cfg, "enc"
             )
-            del enc_cfg
         if not cfg.tie_embeddings:
             params["unembed"] = dense_init(k_out, cfg.d_model, cfg.vocab, scale=0.02)
         return params
@@ -427,10 +424,9 @@ class LanguageModel:
         # per-slot layout: position (B,) -> positions (B, S); shared: (S,)
         pos0 = state.position
         positions = (pos0[:, None] if pos0.ndim else pos0) + jnp.arange(x.shape[1])
-        aux = jnp.float32(0.0)
         new_caches = {}
         if cfg.family == "hybrid":
-            x, aux, new_caches = self._hybrid_stack(
+            x, _, new_caches = self._hybrid_stack(
                 params, x, positions, caches=state.caches
             )
         else:

@@ -77,7 +77,10 @@ def _maybe_dq(m, shape, size, on: bool) -> Array:
 def init_state(params: Any, cfg: AdamWConfig) -> dict:
     # m and v must be DISTINCT buffers (donation forbids aliased arguments)
     q = cfg.quantize_moments
-    zero_q = lambda p: _maybe_q(jnp.zeros_like(p, jnp.float32), q)
+
+    def zero_q(p):
+        return _maybe_q(jnp.zeros_like(p, jnp.float32), q)
+
     return {
         "step": jnp.int32(0),
         "m": jax.tree.map(zero_q, params),

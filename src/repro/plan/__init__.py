@@ -9,20 +9,26 @@ depth, execution impl) behind one shape- and accuracy-aware API:
 See DESIGN.md section Planner for the cost model.
 """
 from repro.plan.cost import (  # noqa: F401
+    DEFAULT_BALANCE,
     MODE_REL_ERROR,
     NATIVE_REL_ERROR,
     CostEstimate,
+    MachineBalance,
     cheapest_mode,
     estimate,
+    fit_balance,
     limb_factors,
     strassen_overhead,
 )
 from repro.plan.planner import (  # noqa: F401
+    TUNE_TABLE_ENV,
     Plan,
+    active_tune_table,
     clear_plan_cache,
     execute,
     matmul,
     plan_cache_stats,
     plan_matmul,
     plan_model_policy,
+    set_tune_table,
 )

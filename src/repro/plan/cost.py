@@ -30,7 +30,7 @@ import dataclasses
 # Machine balance: folded in from the dry-run roofline (launch/hlo_cost.py).
 from repro.launch.hlo_cost import HBM_BW, PEAK_FLOPS
 
-from repro.core.precision import MODE_LIMBS, MODE_PASSES, Mode
+from repro.core.precision import MODE_PASSES, Mode
 
 F32_BYTES = 4
 BF16_BYTES = 2
@@ -52,6 +52,47 @@ NATIVE_REL_ERROR = MODE_REL_ERROR[Mode.M24]
 
 def _ceil_to(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineBalance:
+    """The roofline's machine constants: peak FLOP/s and HBM bandwidth.
+
+    The defaults are the hand-entered TPU-balance numbers shared with the
+    dry-run roofline (launch/hlo_cost.py).  ``fit_balance`` re-fits both from
+    a measured tuning table (repro.tune) so the planner can rank candidates
+    against the machine it actually runs on (DESIGN.md section Autotuner).
+    """
+
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    source: str = "default"
+
+
+DEFAULT_BALANCE = MachineBalance()
+
+
+def fit_balance(samples, *, source: str = "fit") -> MachineBalance:
+    """Re-fit the roofline constants from measured (CostEstimate, wall_s) pairs.
+
+    Under the roofline ``t = max(flops/P, bytes/B)`` every sample is a lower
+    bound ``P >= flops/t`` and ``B >= bytes/t``; the tightest machine
+    consistent with all samples is the max over each bound — the achieved-
+    rate envelope.  Compute-bound samples pin P, memory-bound samples pin B;
+    with only one regime sampled the other constant stays a (loose) envelope
+    too, which only shrinks the estimated time of candidates the measurements
+    never contradicted.  Empty/degenerate input falls back to the defaults.
+    """
+    peak = 0.0
+    bw = 0.0
+    for est, wall_s in samples:
+        if wall_s <= 0:
+            continue
+        peak = max(peak, est.flops / wall_s)
+        bw = max(bw, est.hbm_bytes / wall_s)
+    if peak <= 0 or bw <= 0:
+        return DEFAULT_BALANCE
+    return MachineBalance(peak_flops=peak, hbm_bw=bw, source=source)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -26,14 +26,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import glob
 import math
+import os
 from typing import Any
 
 import jax
 
-from repro.core.precision import DF32_MODES, DoubleF32, Mode
+from repro.core.precision import DF32_MODES, MODE_LIMBS, DoubleF32, Mode
 from repro.plan import cost as cost_lib
-from repro.plan.cost import CostEstimate, MODE_REL_ERROR, NATIVE_REL_ERROR
+from repro.plan.cost import CostEstimate, NATIVE_REL_ERROR
 
 Array = jax.Array
 
@@ -57,6 +59,17 @@ class Plan:
     reason: str
     accuracy: float | None = None
     align: int = 128
+    #: how the winning candidate's cost was resolved (DESIGN.md Autotuner):
+    #: 'measured' (exact tuning-table hit), 'interpolated' (flops-scaled
+    #: nearest neighbor), or 'roofline' (model fallback — the only source
+    #: when no tuning table is active).
+    source: str = "roofline"
+    #: resolved execution time ranked against the other candidates —
+    #: measured/scaled seconds under a tuning table, cost.t_total_s otherwise.
+    t_resolved_s: float | None = None
+    #: Pallas (bm, bn, bk) tile override carried from the winning tuning
+    #: record; None = kernel defaults.  Only meaningful for impl='pallas'.
+    block: tuple[int, int, int] | None = None
 
     @property
     def batch(self) -> int:
@@ -72,10 +85,11 @@ class Plan:
 
     def describe(self) -> str:
         m, k, n = self.mkn
+        t = self.cost.t_total_s if self.t_resolved_s is None else self.t_resolved_s
         return (
             f"[{self.batch}x]({m}x{k})@({k}x{n}) -> mode={self.mode.name} "
             f"impl={self.impl} depth={self.strassen_depth} "
-            f"({self.cost.dominant}-bound, ~{self.cost.t_total_s*1e6:.1f}us) "
+            f"({self.cost.dominant}-bound, ~{t*1e6:.1f}us {self.source}) "
             f"| {self.reason}"
         )
 
@@ -107,6 +121,111 @@ def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _STATS.hits = 0
     _STATS.misses = 0
+
+
+# ---------------------------------------------------------------------------
+# Tuning tables (repro.tune) — measured costs override the roofline model.
+# ---------------------------------------------------------------------------
+
+#: env var naming a tuning-table JSON file, or a directory of
+#: ``<backend>.json`` tables (the layout ``python -m repro.tune`` writes).
+TUNE_TABLE_ENV = "TUNE_TABLE"
+
+_TABLES_UNSET = object()
+_GLOBAL_TABLES: Any = _TABLES_UNSET  # dict[backend -> TuneTable] once resolved
+
+
+def _load_tables(src) -> dict:
+    """Normalize a table source (TuneTable | file path | dir path) to a
+    backend-keyed dict — tables never apply across backends."""
+    from repro.tune.table import TuneTable
+
+    if hasattr(src, "records"):  # an in-memory TuneTable
+        return {src.backend: src}
+    tables = {}
+    if os.path.isdir(src):
+        for path in sorted(glob.glob(os.path.join(src, "*.json"))):
+            t = TuneTable.load(path)
+            tables[t.backend] = t
+    else:
+        t = TuneTable.load(src)
+        tables[t.backend] = t
+    return tables
+
+
+def _table_cache_key(path: str) -> tuple:
+    """(path, mtime_ns, size) of the table file(s): rewriting a table on disk
+    — e.g. re-running ``python -m repro.tune`` under a live server — must
+    invalidate the load cache, or the stale table's stale fingerprint would
+    keep the plan cache serving superseded plans."""
+    paths = sorted(glob.glob(os.path.join(path, "*.json"))) if os.path.isdir(path) else [path]
+    stats = []
+    for p in paths:
+        try:
+            st = os.stat(p)
+            stats.append((p, st.st_mtime_ns, st.st_size))
+        except OSError:
+            stats.append((p, 0, 0))
+    return (path, tuple(stats))
+
+
+@functools.lru_cache(maxsize=16)
+def _load_tables_for_key(key: tuple) -> dict:
+    return _load_tables(key[0])
+
+
+def _load_tables_cached(path: str) -> dict:
+    return _load_tables_for_key(_table_cache_key(path))
+
+
+def set_tune_table(table) -> None:
+    """Install the process-global tuning table(s) the planner resolves
+    against: a TuneTable, a table-file path, or a directory of per-backend
+    tables.  ``None`` clears the explicit setting, so the ``TUNE_TABLE`` env
+    var is consulted (lazily) again.  Cached plans are keyed by table
+    fingerprint, so swapping tables never returns a stale plan."""
+    global _GLOBAL_TABLES
+    _GLOBAL_TABLES = _TABLES_UNSET if table is None else _load_tables(table)
+
+
+def active_tune_table(backend: str | None = None):
+    """The tuning table the planner would use for ``backend`` (None -> host
+    backend), or None when running pure-roofline."""
+    global _GLOBAL_TABLES
+    if _GLOBAL_TABLES is _TABLES_UNSET:
+        path = os.environ.get(TUNE_TABLE_ENV, "")
+        _GLOBAL_TABLES = _load_tables(path) if path else {}
+    if backend is None:
+        backend = jax.default_backend()
+    return _GLOBAL_TABLES.get(backend)
+
+
+def _resolve_tune_table(tune_table, backend: str):
+    """Per-call table resolution: explicit arg beats the global/env setting;
+    ``False`` forces pure roofline; a table only applies to its own
+    backend."""
+    if tune_table is False:
+        return None
+    if tune_table is None:
+        return active_tune_table(backend)
+    if isinstance(tune_table, str):
+        return _load_tables_cached(tune_table).get(backend)
+    return tune_table if tune_table.backend == backend else None
+
+
+def _candidate_time(table, m, k, n, mode, impl, depth, est):
+    """Resolve one candidate's cost in the three-level order (DESIGN.md
+    section Autotuner): exact tuning-table hit -> flops-scaled nearest
+    neighbor -> roofline estimate.  Returns (seconds, source, block)."""
+    if table is not None:
+        rec = table.lookup(m, k, n, mode, impl, depth)
+        if rec is not None:
+            return rec.wall_s, "measured", rec.block
+        near = table.nearest(m, k, n, mode, impl, depth)
+        if near is not None:
+            rec, ratio = near
+            return rec.wall_s * ratio, "interpolated", rec.block
+    return est.t_total_s, "roofline", None
 
 
 # ---------------------------------------------------------------------------
@@ -144,7 +263,7 @@ def _impl_candidates(
     cands.append("xla")
     if backend == "tpu":
         # Fused limb extraction only pays off with >= 2 limbs resident.
-        if cost_lib.MODE_LIMBS[mode] >= 2:
+        if MODE_LIMBS[mode] >= 2:
             cands.append("pallas")
     return cands
 
@@ -173,6 +292,7 @@ def plan_matmul(
     rounding: str = "rne",
     max_depth: int = _MAX_DEPTH_DEFAULT,
     align: int = 128,
+    tune_table: Any = None,
 ) -> Plan:
     """Choose (mode, Strassen depth, impl) for ``a @ b`` from the cost model.
 
@@ -188,6 +308,10 @@ def plan_matmul(
       rounding: limb-extraction rounding ('rne' | 'grte' | 'trunc').
       max_depth: largest Strassen depth the cost model may choose.
       align: leaf tile alignment (MXU tile side).
+      tune_table: measured-cost table (repro.tune) candidate costs resolve
+        against — a TuneTable, a path, ``None`` (use the global/env setting,
+        see ``set_tune_table``), or ``False`` (force pure roofline).  A
+        table only applies when its backend matches ``backend``.
 
     Returns a cached :class:`Plan`; identical static requests return the
     identical object (see ``plan_cache_stats``).
@@ -204,8 +328,10 @@ def plan_matmul(
         raise ValueError(f"unknown dtype {dtype!r}: want 'float32' | 'df32'")
     if backend is None:
         backend = jax.default_backend()
+    table = _resolve_tune_table(tune_table, backend)
     key = (shape_a, shape_b, dtype, accuracy, mode if mode is None else int(mode),
-           impl, backend, rounding, max_depth, align)
+           impl, backend, rounding, max_depth, align,
+           table.fingerprint if table is not None else None)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         _STATS.hits += 1
@@ -241,11 +367,21 @@ def plan_matmul(
     m, k = shape_a[-2], shape_a[-1]
     n = shape_b[1]
 
-    best: tuple[tuple, CostEstimate, str, int] | None = None
+    # With a tuning table active, the roofline fallback runs on the table's
+    # re-fit machine constants (cost.fit_balance) so measured and modeled
+    # candidate times stay commensurable in one ranking; without one, the
+    # hand-entered TPU-balance defaults apply.
+    balance = table.balance if table is not None else cost_lib.DEFAULT_BALANCE
+    best: tuple[tuple, CostEstimate, str, int, str, Any] | None = None
     for cand_impl in _impl_candidates(mode, impl, backend, accuracy,
                                       mode_pinned, rounding):
         for depth in _depth_candidates(m, k, n, mode, max_depth, align):
-            est = cost_lib.estimate(m, k, n, mode, cand_impl, depth, align=align)
+            est = cost_lib.estimate(
+                m, k, n, mode, cand_impl, depth, align=align,
+                peak_flops=balance.peak_flops, hbm_bw=balance.hbm_bw,
+            )
+            t_cand, source, block = _candidate_time(
+                table, m, k, n, mode, cand_impl, depth, est)
             if batch > 1:
                 est = CostEstimate(
                     flops=est.flops * batch,
@@ -253,14 +389,15 @@ def plan_matmul(
                     t_compute_s=est.t_compute_s * batch,
                     t_memory_s=est.t_memory_s * batch,
                 )
-            # Roofline max() ties are common when compute-bound: break them
+                t_cand *= batch
+            # Resolved-time ties are common when compute-bound: break them
             # toward less HBM traffic (headroom for everything co-scheduled),
             # then fewer flops.
-            rank = (est.t_total_s, est.hbm_bytes, est.flops)
+            rank = (t_cand, est.hbm_bytes, est.flops)
             if best is None or rank < best[0]:
-                best = (rank, est, cand_impl, depth)
+                best = (rank, est, cand_impl, depth, source, block)
     assert best is not None
-    _, est, chosen_impl, chosen_depth = best
+    rank, est, chosen_impl, chosen_depth, source, block = best
     why = []
     why.append(
         f"mode {mode.name} pinned" if mode_pinned
@@ -270,6 +407,10 @@ def plan_matmul(
     why.append(f"impl {chosen_impl}" + (" pinned" if impl is not None else " by cost"))
     why.append(f"depth {chosen_depth} by cost" if chosen_depth or max_depth
                else "depth 0 (disabled)")
+    why.append(
+        f"cost {source}" + (f" (table {table.fingerprint[:8]})"
+                            if table is not None else "")
+    )
     plan = Plan(
         shape_a=shape_a,
         shape_b=shape_b,
@@ -283,6 +424,9 @@ def plan_matmul(
         reason="; ".join(why),
         accuracy=accuracy,
         align=align,
+        source=source,
+        t_resolved_s=rank[0],
+        block=block if chosen_impl == "pallas" else None,
     )
     _PLAN_CACHE[key] = plan
     return plan
@@ -311,7 +455,8 @@ def execute(plan: Plan, a, b):
             f"do not match plan {plan.shape_a} @ {plan.shape_b}"
         )
     mm = functools.partial(
-        rmpm.mp_matmul, mode=plan.mode, rounding=plan.rounding, impl=plan.impl
+        rmpm.mp_matmul, mode=plan.mode, rounding=plan.rounding, impl=plan.impl,
+        block=plan.block,
     )
     if plan.strassen_depth == 0:
         return mm(a, b)
@@ -338,6 +483,7 @@ def matmul(
     backend: str | None = None,
     rounding: str = "rne",
     max_depth: int = _MAX_DEPTH_DEFAULT,
+    tune_table: Any = None,
 ) -> Array:
     """Plan-and-execute convenience: ``matmul(a, b, accuracy=2**-12)``."""
     dtype = _DF32 if isinstance(a, DoubleF32) or isinstance(b, DoubleF32) else "float32"
@@ -353,6 +499,7 @@ def matmul(
         backend=backend,
         rounding=rounding,
         max_depth=max_depth,
+        tune_table=tune_table,
     )
     return execute(plan, a, b)
 
@@ -373,7 +520,7 @@ _OP_ACCURACY_SCALE = {
 
 def plan_model_policy(cfg: Any, tokens: int, *, accuracy: float,
                       backend: str | None = None, max_depth: int = 0,
-                      rounding: str = "rne"):
+                      rounding: str = "rne", tune_table: Any = None):
     """Plan the dominant GEMMs of an ArchConfig-like model and fold the
     decisions into a PrecisionPolicy (+ the per-op plans, for reporting).
 
@@ -404,7 +551,7 @@ def plan_model_policy(cfg: Any, tokens: int, *, accuracy: float,
         plans[op] = plan_matmul(
             (max(tokens, 1), din), (din, dout),
             accuracy=acc, backend=backend, max_depth=max_depth,
-            rounding=rounding,
+            rounding=rounding, tune_table=tune_table,
         )
     default_mode = plans["mlp_up"].mode
     overrides = tuple(

@@ -42,7 +42,7 @@ __all__ = ["Request", "ServeEngine"]
 
 
 def _plan_phase(model: LanguageModel, tokens: int, accuracy: float,
-                backend: str | None):
+                backend: str | None, tune_table=None):
     """Plan one phase's policy (prefill or decode) for its GEMM M-dim."""
     from repro.core.precision import DF32_MODES
     from repro.plan import plan_model_policy
@@ -50,7 +50,7 @@ def _plan_phase(model: LanguageModel, tokens: int, accuracy: float,
     base = model.cfg.policy
     policy, plans = plan_model_policy(
         model.cfg, tokens=tokens, accuracy=accuracy,
-        backend=backend, rounding=base.rounding,
+        backend=backend, rounding=base.rounding, tune_table=tune_table,
     )
     if (
         base.impl == "native"
@@ -97,20 +97,23 @@ class ServeEngine:
                  greedy: bool = True, accuracy: float | None = None,
                  plan_backend: str | None = None,
                  prefill_tokens: int | None = None,
-                 decode_accuracy_scale: float | None = None):
+                 decode_accuracy_scale: float | None = None,
+                 tune_table=None):
         # metrics first: its plan-cache snapshot must predate phase planning
         # so plan_cache_delta() counts the plans this engine triggers
         self.metrics = ServeMetrics(batch_slots)
         if accuracy is not None:
             # Per-phase planning (DESIGN.md section Serving): decode GEMMs
             # see M = batch_slots at a tightened budget, prefill GEMMs see
-            # M = prompt tokens at the caller's budget.
+            # M = prompt tokens at the caller's budget.  ``tune_table``
+            # (TuneTable | path | None | False) routes both phases through
+            # the measured-cost planner (DESIGN.md section Autotuner).
             scale = (self.DECODE_ACCURACY_SCALE if decode_accuracy_scale is None
                      else decode_accuracy_scale)
             self.model_decode, decode_plans = _plan_phase(
-                model, batch_slots, accuracy * scale, plan_backend)
+                model, batch_slots, accuracy * scale, plan_backend, tune_table)
             self.model_prefill, prefill_plans = _plan_phase(
-                model, prefill_tokens or max_len, accuracy, plan_backend)
+                model, prefill_tokens or max_len, accuracy, plan_backend, tune_table)
             self.phase_plans = {"prefill": prefill_plans, "decode": decode_plans}
             # flat view kept for the PR-1 API (`engine.plans`)
             self.plans = {

@@ -8,12 +8,11 @@ live set accordingly (DESIGN.md section 4).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.compress import compressed_psum_pod
 from repro.distributed.sharding import BATCH_AXES, constrain
 from repro.models.lm import LanguageModel
 from repro.optim import adamw
@@ -105,9 +104,8 @@ def make_train_step(
         grads = jax.tree.map(lambda g: g / tcfg.accum_steps, acc)
         return grads, metrics
 
-    compress_on = lambda: (
-        tcfg.grad_compression and mesh is not None and "pod" in mesh.axis_names
-    )
+    def compress_on() -> bool:
+        return tcfg.grad_compression and mesh is not None and "pod" in mesh.axis_names
 
     def train_step(state, batch):
         params = state["params"]

@@ -1,0 +1,34 @@
+"""repro.tune — measured-cost autotuner feeding the matmul planner.
+
+Microbenchmarks the planner's candidate space — (RMPM mode, Strassen depth,
+impl, Pallas block sizes) — on the device it runs on, and persists the
+measurements to a versioned JSON tuning table the planner resolves against
+(exact hit -> scaled neighbor -> re-fit roofline; DESIGN.md section
+Autotuner):
+
+    table = tune((128, 256, 512), iters=3)     # or: python -m repro.tune
+    table.save("tuning/cpu.json")
+    plan_matmul((256, 256), (256, 256), accuracy=2**-4, tune_table=table)
+
+Tables also load process-wide from the ``TUNE_TABLE`` env var (a table file
+or a directory of ``<backend>.json`` files) or via
+``repro.plan.set_tune_table``.
+"""
+
+from repro.tune.runner import (  # noqa: F401
+    DEFAULT_BLOCKS,
+    DEFAULT_MODES,
+    Candidate,
+    candidates,
+    depth_candidates,
+    measure,
+    tune,
+)
+from repro.tune.table import (  # noqa: F401
+    NATIVE_MODE_KEY,
+    NEIGHBOR_MAX_FLOP_RATIO,
+    SCHEMA_VERSION,
+    TuneRecord,
+    TuneTable,
+    mode_key,
+)

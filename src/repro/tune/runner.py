@@ -1,0 +1,191 @@
+"""On-device autotuner: microbenchmark the planner's candidate space.
+
+For each shape in the grid the runner measures every candidate execution
+point — (RMPM mode, Strassen depth, impl, and Pallas block sizes ``bm/bn/bk``
+for kernels/limb_matmul) — and records median wall time, achieved FLOP/s and
+max-abs error vs a float64 reference.  The result is a :class:`TuneTable`
+(tune/table.py) the planner resolves against instead of trusting the
+hand-entered roofline constants (DESIGN.md section Autotuner).
+
+The candidate space mirrors the planner's own (planner._impl_candidates /
+_depth_candidates): 'native'+'xla' off-TPU, 'xla'+'pallas' (with a block
+grid) on TPU, depths gated by ``align * 2**depth`` fitting the shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro.core.precision import MODE_LIMBS, Mode
+from repro.tune.table import TuneRecord, TuneTable, mode_key
+
+DEFAULT_MODES = (Mode.M8, Mode.M16, Mode.M24)
+
+#: Pallas block-size grid (bm, bn, bk); ops.py clamps each to the shape, so
+#: oversized entries degrade to the whole-dim block instead of failing.
+DEFAULT_BLOCKS = ((128, 128, 128), (128, 128, 512))
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One execution point of the tuner's search space."""
+
+    mode: Mode
+    impl: str
+    depth: int
+    block: tuple[int, int, int] | None = None
+
+    def label(self) -> str:
+        blk = "x".join(map(str, self.block)) if self.block else "-"
+        return f"{mode_key(self.mode, self.impl)}/{self.impl}/d{self.depth}/{blk}"
+
+
+def depth_candidates(m: int, k: int, n: int, max_depth: int, align: int) -> list[int]:
+    """Depths whose leaves keep at least one ``align`` tile per side — the
+    same gate the planner applies (planner._depth_candidates)."""
+    out = [0]
+    for d in range(1, max_depth + 1):
+        if min(m, k, n) >= align * (2**d):
+            out.append(d)
+    return out
+
+
+def candidates(
+    m: int,
+    k: int,
+    n: int,
+    backend: str,
+    *,
+    modes: tuple[Mode, ...] = DEFAULT_MODES,
+    impls: tuple[str, ...] | None = None,
+    max_depth: int = 1,
+    align: int = 128,
+    blocks: tuple[tuple[int, int, int], ...] = DEFAULT_BLOCKS,
+) -> list[Candidate]:
+    """The measurable candidate space for one shape on one backend."""
+    if impls is None:
+        impls = ("xla", "pallas") if backend == "tpu" else ("native", "xla")
+    out: list[Candidate] = []
+    for depth in depth_candidates(m, k, n, max_depth, align):
+        for impl in impls:
+            if impl == "native":
+                # plain f32 dot ignores the mode: measure once per depth
+                out.append(Candidate(Mode.M24, "native", depth))
+                continue
+            for mode in modes:
+                if impl == "pallas":
+                    if MODE_LIMBS[mode] < 2:
+                        continue  # fused extraction needs >= 2 resident limbs
+                    for blk in blocks:
+                        out.append(Candidate(mode, "pallas", depth, blk))
+                else:
+                    out.append(Candidate(mode, impl, depth))
+    return out
+
+
+def _median_wall_us(fn, a, b, iters: int, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(a, b))
+    ts = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a, b))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def measure(
+    m: int,
+    k: int,
+    n: int,
+    cand: Candidate,
+    *,
+    iters: int = 3,
+    seed: int = 0,
+) -> TuneRecord:
+    """Measure one candidate on one shape: median wall, FLOP/s, f64 error."""
+    from repro.core.rmpm import mp_matmul
+
+    rng = np.random.default_rng((seed, m, k, n))
+    a = np.asarray(rng.standard_normal((m, k)), np.float32)
+    b = np.asarray(rng.standard_normal((k, n)), np.float32)
+    aj, bj = jax.numpy.asarray(a), jax.numpy.asarray(b)
+    fn = jax.jit(
+        functools.partial(
+            mp_matmul,
+            mode=cand.mode,
+            impl=cand.impl,
+            strassen_depth=cand.depth,
+            block=cand.block,
+        )
+    )
+    wall_us = _median_wall_us(fn, aj, bj, iters)
+    out = np.asarray(fn(aj, bj), np.float64)
+    ref = a.astype(np.float64) @ b.astype(np.float64)
+    max_abs = float(np.abs(out - ref).max())
+    rel = max_abs / float(np.abs(ref).max())
+    return TuneRecord(
+        m=m,
+        k=k,
+        n=n,
+        mode=mode_key(cand.mode, cand.impl),
+        impl=cand.impl,
+        depth=cand.depth,
+        wall_us=wall_us,
+        flops_per_s=2.0 * m * k * n / (wall_us * 1e-6),
+        max_abs_err=max_abs,
+        rel_err=rel,
+        block=cand.block,
+        iters=iters,
+    )
+
+
+def tune(
+    sizes: tuple[int, ...],
+    *,
+    backend: str | None = None,
+    modes: tuple[Mode, ...] = DEFAULT_MODES,
+    impls: tuple[str, ...] | None = None,
+    max_depth: int = 1,
+    align: int = 128,
+    blocks: tuple[tuple[int, int, int], ...] = DEFAULT_BLOCKS,
+    iters: int = 3,
+    seed: int = 0,
+    progress=None,
+) -> TuneTable:
+    """Sweep the candidate space over square ``sizes`` -> a TuneTable."""
+    if backend is None:
+        backend = jax.default_backend()
+    records = []
+    for size in sizes:
+        m = k = n = int(size)
+        for cand in candidates(
+            m,
+            k,
+            n,
+            backend,
+            modes=modes,
+            impls=impls,
+            max_depth=max_depth,
+            align=align,
+            blocks=blocks,
+        ):
+            rec = measure(m, k, n, cand, iters=iters, seed=seed)
+            records.append(rec)
+            if progress is not None:
+                progress(
+                    f"n={size} {cand.label()}: {rec.wall_us:.0f}us "
+                    f"({rec.flops_per_s / 1e9:.2f} GFLOP/s, rel={rec.rel_err:.1e})"
+                )
+    return TuneTable(
+        backend=backend,
+        records=tuple(records),
+        align=align,
+        jax_version=jax.__version__,
+        iters=iters,
+    )

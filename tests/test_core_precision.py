@@ -7,14 +7,12 @@ Validates the paper's central claims at the numeric level:
   * GRTE rounding (Eq. 10) behaves between truncation and RNE
 """
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
 from hypothesis_compat import given, settings, st  # property tests skip w/o hypothesis
 
 from repro.core import (
-    MODE_LIMBS,
     DoubleF32,
     Mode,
     auto_mode,

@@ -20,7 +20,9 @@ class TestParser:
         a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
 
         def scan5(x):
-            body = lambda c, _: (c @ c, None)
+            def body(c, _):
+                return c @ c, None
+
             out, _ = jax.lax.scan(body, x, None, length=5)
             return out
 
@@ -31,7 +33,9 @@ class TestParser:
 
         def nested(x):
             def outer(c, _):
-                inner = lambda ci, _: (ci @ ci, None)
+                def inner(ci, _):
+                    return ci @ ci, None
+
                 c2, _ = jax.lax.scan(inner, c, None, length=3)
                 return c2, None
             out, _ = jax.lax.scan(outer, x, None, length=4)
@@ -56,7 +60,10 @@ class TestParser:
         reason="needs jax.set_mesh / jax.sharding.AxisType (jax >= 0.5)",
     )
     def test_collective_bytes_multi_device(self):
-        import subprocess, sys, os, textwrap
+        import os
+        import subprocess
+        import sys
+        import textwrap
         code = textwrap.dedent("""
             import os
             os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,7 +1,6 @@
 """Per-kernel shape/dtype sweeps vs ref.py oracles (interpret mode on CPU)."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.limb_matmul.limb_matmul import limb_matmul_dd_pallas

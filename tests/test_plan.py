@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from repro.core.precision import DoubleF32, Mode, df32_from_f32
 from repro.plan import (
     MODE_REL_ERROR,
-    Plan,
     clear_plan_cache,
     estimate,
     execute,

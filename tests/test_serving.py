@@ -3,7 +3,6 @@ ring-buffer sliding window."""
 import dataclasses
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -51,7 +51,9 @@ class TestEconomy:
         # The compiled graph must contain exactly 7^depth leaf dots —
         # the paper's "7 multiplications instead of 8" at every level.
         a = jax.ShapeDtypeStruct((64 * 2**depth, 64 * 2**depth), jnp.float32)
-        fn = lambda x, y: strassen_matmul(x, y, depth=depth, align=64)
+        def fn(x, y):
+            return strassen_matmul(x, y, depth=depth, align=64)
+
         hlo = jax.jit(fn).lower(a, a).as_text()
         assert hlo.count("dot_general") == 7**depth
 

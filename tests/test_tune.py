@@ -1,0 +1,446 @@
+"""Autotuner subsystem (repro.tune): tuning-table JSON round-trip, planner
+resolution precedence (exact table hit > scaled neighbor > roofline),
+TUNE_TABLE env/arg override plumbing, the tuner CLI end-to-end, and the CI
+regression/drift gates (benchmarks/check_regression.py,
+make_experiments_md --check)."""
+
+import json
+import os
+
+import pytest
+
+from repro.core.precision import Mode
+from repro.plan import (
+    DEFAULT_BALANCE,
+    NATIVE_REL_ERROR,
+    cheapest_mode,
+    clear_plan_cache,
+    plan_matmul,
+    plan_model_policy,
+    set_tune_table,
+)
+from repro.tune import SCHEMA_VERSION, TuneRecord, TuneTable, mode_key
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+COMMITTED_TABLE = os.path.join(REPO, "tuning", "cpu.json")
+
+ACCURACIES = (2.0**-4, 2.0**-12, 2.0**-20)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_planner(monkeypatch):
+    monkeypatch.delenv("TUNE_TABLE", raising=False)
+    set_tune_table(None)
+    clear_plan_cache()
+    yield
+    set_tune_table(None)
+    clear_plan_cache()
+
+
+def _rec(m, k, n, mode, impl, depth, wall_us, block=None):
+    return TuneRecord(
+        m=m,
+        k=k,
+        n=n,
+        mode=mode_key(mode, impl),
+        impl=impl,
+        depth=depth,
+        wall_us=wall_us,
+        flops_per_s=2.0 * m * k * n / (wall_us * 1e-6),
+        max_abs_err=1e-3,
+        rel_err=1e-6,
+        block=block,
+        iters=1,
+    )
+
+
+def _planner_candidates(n, accuracy, table):
+    """The (impl, depth) set the planner considers for a cpu square-n cell,
+    restricted to points the table measured."""
+    mode = cheapest_mode(accuracy)
+    impls = ["xla"]
+    if NATIVE_REL_ERROR <= accuracy:
+        impls.insert(0, "native")
+    cells = {}
+    for impl in impls:
+        for depth in (0, 1):
+            if depth and n < 256:
+                continue
+            rec = table.lookup(n, n, n, mode, impl, depth)
+            if rec is not None:
+                cells[(impl, depth)] = rec
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Table persistence
+# ---------------------------------------------------------------------------
+
+
+class TestTableRoundTrip:
+    def test_save_load_identity(self, tmp_path):
+        table = TuneTable(
+            backend="cpu",
+            records=(
+                _rec(128, 128, 128, Mode.M8, "xla", 0, 100.0),
+                _rec(128, 128, 128, Mode.M16, "pallas", 0, 50.0, block=(128, 128, 128)),
+            ),
+            align=128,
+            jax_version="0.0.test",
+            iters=3,
+        )
+        path = tmp_path / "t.json"
+        table.save(str(path))
+        loaded = TuneTable.load(str(path))
+        assert loaded == table
+        assert loaded.fingerprint == table.fingerprint
+        assert loaded.records[1].block == (128, 128, 128)
+
+    def test_schema_version_enforced(self, tmp_path):
+        path = tmp_path / "bad.json"
+        path.write_text(
+            json.dumps({"schema_version": 999, "backend": "cpu", "records": []})
+        )
+        with pytest.raises(ValueError, match="schema_version"):
+            TuneTable.load(str(path))
+        doc = json.load(open(COMMITTED_TABLE))
+        assert doc["schema_version"] == SCHEMA_VERSION
+
+    def test_lookup_prefers_fastest_block_variant(self):
+        table = TuneTable(
+            backend="tpu",
+            records=(
+                _rec(256, 256, 256, Mode.M16, "pallas", 0, 90.0, block=(128, 128, 128)),
+                _rec(256, 256, 256, Mode.M16, "pallas", 0, 40.0, block=(128, 128, 256)),
+            ),
+        )
+        rec = table.lookup(256, 256, 256, Mode.M16, "pallas", 0)
+        assert rec.block == (128, 128, 256) and rec.wall_us == 40.0
+
+    def test_nearest_scales_and_bounds(self):
+        table = TuneTable(
+            backend="cpu", records=(_rec(256, 256, 256, Mode.M8, "xla", 0, 100.0),)
+        )
+        assert table.lookup(512, 512, 512, Mode.M8, "xla", 0) is None
+        rec, ratio = table.nearest(512, 512, 512, Mode.M8, "xla", 0)
+        assert rec.m == 256 and ratio == pytest.approx(8.0)
+        # 256 -> 16384 is a 2^18 flop ratio: outside the extrapolation bound
+        assert table.nearest(16384, 16384, 16384, Mode.M8, "xla", 0) is None
+        # no same-config record at all
+        assert table.nearest(512, 512, 512, Mode.M16, "xla", 0) is None
+
+    def test_native_records_collapse_the_mode(self):
+        table = TuneTable(
+            backend="cpu", records=(_rec(128, 128, 128, Mode.M24, "native", 0, 10.0),)
+        )
+        for mode in (Mode.M8, Mode.M16, Mode.M24):
+            assert table.lookup(128, 128, 128, mode, "native", 0) is not None
+
+
+# ---------------------------------------------------------------------------
+# Planner resolution: exact hit > neighbor > roofline
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_table():
+    # measurement says native is 100x faster than the roofline's xla pick
+    return TuneTable(
+        backend="cpu",
+        records=(
+            _rec(256, 256, 256, Mode.M24, "native", 0, 10.0),
+            _rec(256, 256, 256, Mode.M8, "xla", 0, 1000.0),
+        ),
+    )
+
+
+class TestResolutionPrecedence:
+    def test_exact_hit_overrides_roofline(self):
+        table = _synthetic_table()
+        base = plan_matmul(
+            (256, 256), (256, 256), accuracy=2**-4, backend="cpu", tune_table=False
+        )
+        tuned = plan_matmul(
+            (256, 256), (256, 256), accuracy=2**-4, backend="cpu", tune_table=table
+        )
+        assert base.impl == "xla" and base.source == "roofline"
+        assert tuned.impl == "native" and tuned.source == "measured"
+        assert tuned.t_resolved_s == pytest.approx(10e-6)
+
+    def test_neighbor_interpolates_when_no_exact_hit(self):
+        tuned = plan_matmul(
+            (320, 256),
+            (256, 256),
+            accuracy=2**-4,
+            backend="cpu",
+            tune_table=_synthetic_table(),
+        )
+        assert tuned.source == "interpolated"
+        assert tuned.impl == "native"  # scaled times preserve the measured order
+        assert tuned.t_resolved_s == pytest.approx(10e-6 * 320 / 256)
+
+    def test_roofline_fallback_beyond_neighbor_bound(self):
+        tuned = plan_matmul(
+            (16384, 16384),
+            (16384, 16384),
+            accuracy=2**-4,
+            backend="cpu",
+            tune_table=_synthetic_table(),
+        )
+        assert tuned.source == "roofline"
+
+    def test_roofline_fallback_uses_fitted_balance(self):
+        table = _synthetic_table()
+        base = plan_matmul(
+            (16384, 16384),
+            (16384, 16384),
+            accuracy=2**-4,
+            backend="cpu",
+            tune_table=False,
+        )
+        tuned = plan_matmul(
+            (16384, 16384),
+            (16384, 16384),
+            accuracy=2**-4,
+            backend="cpu",
+            tune_table=table,
+        )
+        assert table.balance.peak_flops != DEFAULT_BALANCE.peak_flops
+        assert tuned.cost.t_total_s != base.cost.t_total_s
+
+    def test_backend_mismatch_ignores_table(self):
+        tuned = plan_matmul(
+            (256, 256),
+            (256, 256),
+            accuracy=2**-4,
+            backend="tpu",
+            tune_table=_synthetic_table(),  # a cpu table
+        )
+        assert tuned.source == "roofline"
+
+    def test_table_fingerprint_in_plan_cache_key(self):
+        base = plan_matmul((256, 256), (256, 256), accuracy=2**-4, backend="cpu")
+        tuned = plan_matmul(
+            (256, 256),
+            (256, 256),
+            accuracy=2**-4,
+            backend="cpu",
+            tune_table=_synthetic_table(),
+        )
+        assert base is not tuned
+        assert base.impl != tuned.impl
+
+
+class TestOverridePlumbing:
+    def test_env_var_file(self, tmp_path, monkeypatch):
+        path = tmp_path / "cpu.json"
+        _synthetic_table().save(str(path))
+        monkeypatch.setenv("TUNE_TABLE", str(path))
+        set_tune_table(None)  # drop the resolved-empty cache; re-read the env
+        p = plan_matmul((256, 256), (256, 256), accuracy=2**-4, backend="cpu")
+        assert p.source == "measured" and p.impl == "native"
+
+    def test_env_var_directory(self, tmp_path, monkeypatch):
+        _synthetic_table().save(str(tmp_path / "cpu.json"))
+        monkeypatch.setenv("TUNE_TABLE", str(tmp_path))
+        set_tune_table(None)
+        p = plan_matmul((256, 256), (256, 256), accuracy=2**-4, backend="cpu")
+        assert p.source == "measured"
+        # tpu plans are untouched by the cpu table
+        q = plan_matmul((256, 256), (256, 256), accuracy=2**-4, backend="tpu")
+        assert q.source == "roofline"
+
+    def test_set_tune_table_explicit(self):
+        set_tune_table(_synthetic_table())
+        p = plan_matmul((256, 256), (256, 256), accuracy=2**-4, backend="cpu")
+        assert p.source == "measured"
+        set_tune_table(None)
+        q = plan_matmul((256, 256), (256, 256), accuracy=2**-4, backend="cpu")
+        assert q.source == "roofline"
+
+    def test_arg_false_forces_roofline(self, monkeypatch, tmp_path):
+        path = tmp_path / "cpu.json"
+        _synthetic_table().save(str(path))
+        monkeypatch.setenv("TUNE_TABLE", str(path))
+        set_tune_table(None)
+        p = plan_matmul(
+            (256, 256), (256, 256), accuracy=2**-4, backend="cpu", tune_table=False
+        )
+        assert p.source == "roofline"
+
+    def test_path_arg(self, tmp_path):
+        path = tmp_path / "anywhere.json"
+        _synthetic_table().save(str(path))
+        p = plan_matmul(
+            (256, 256), (256, 256), accuracy=2**-4, backend="cpu", tune_table=str(path)
+        )
+        assert p.source == "measured"
+
+    def test_plan_model_policy_plumbs_table(self):
+        from repro.configs import get_smoke_config
+
+        cfg = get_smoke_config("qwen1.5-0.5b")
+        table = TuneTable.load(COMMITTED_TABLE)
+        policy, plans = plan_model_policy(
+            cfg, tokens=256, accuracy=2**-4, backend="cpu", tune_table=table
+        )
+        # model GEMMs are rectangular: they resolve via table hit or neighbor,
+        # never the pure roofline, as long as they sit within the bound
+        assert any(p.source in ("measured", "interpolated") for p in plans.values())
+
+
+# ---------------------------------------------------------------------------
+# The committed table + the tuner CLI (acceptance)
+# ---------------------------------------------------------------------------
+
+
+class TestCommittedTable:
+    def test_flips_at_least_one_plan(self):
+        """Acceptance: where the committed measurement disagrees with the
+        roofline model, the planner follows the measurement — and at least
+        one plan differs from the pure-roofline plan."""
+        table = TuneTable.load(COMMITTED_TABLE)
+        sizes = sorted({r.m for r in table.records})
+        flips = []
+        for n in sizes:
+            for acc in ACCURACIES:
+                kwargs = dict(accuracy=acc, backend="cpu", max_depth=1)
+                base = plan_matmul((n, n), (n, n), tune_table=False, **kwargs)
+                tuned = plan_matmul((n, n), (n, n), tune_table=table, **kwargs)
+                assert tuned.source == "measured"
+                cells = _planner_candidates(n, acc, table)
+                # the tuned pick is the measured argmin over the candidates
+                best_us = min(r.wall_us for r in cells.values())
+                assert cells[(tuned.impl, tuned.strassen_depth)].wall_us == best_us
+                if (base.impl, base.strassen_depth) != (
+                    tuned.impl,
+                    tuned.strassen_depth,
+                ):
+                    # measurement must actually disagree with the model here
+                    assert cells[(base.impl, base.strassen_depth)].wall_us > best_us
+                    flips.append((n, acc, base.impl, tuned.impl))
+        assert flips, "committed table never disagrees with the roofline"
+
+
+class TestTunerCLI:
+    def test_cli_table_feeds_planner(self, tmp_path):
+        """Acceptance: `python -m repro.tune --sizes 128,256 --out /tmp/t.json`
+        produces a valid table the planner resolves measured costs from."""
+        from repro.tune.__main__ import main
+
+        out = tmp_path / "t.json"
+        main(["--sizes", "128,256", "--iters", "1", "--out", str(out)])
+        doc = json.load(open(out))
+        assert doc["schema_version"] == SCHEMA_VERSION
+        assert doc["backend"] == "cpu"
+        assert {r["impl"] for r in doc["records"]} >= {"native", "xla"}
+        table = TuneTable.load(str(out))
+        for n in (128, 256):
+            for acc in ACCURACIES:
+                kwargs = dict(accuracy=acc, backend="cpu", max_depth=1)
+                base = plan_matmul((n, n), (n, n), tune_table=False, **kwargs)
+                tuned = plan_matmul((n, n), (n, n), tune_table=table, **kwargs)
+                assert tuned.source == "measured"
+                cells = _planner_candidates(n, acc, table)
+                best_us = min(r.wall_us for r in cells.values())
+                assert cells[(tuned.impl, tuned.strassen_depth)].wall_us == best_us
+                if cells[(base.impl, base.strassen_depth)].wall_us > best_us:
+                    # measurement disagrees with the model: plan must differ
+                    assert (base.impl, base.strassen_depth) != (
+                        tuned.impl,
+                        tuned.strassen_depth,
+                    )
+
+
+# ---------------------------------------------------------------------------
+# CI gates: perf regression + docs drift
+# ---------------------------------------------------------------------------
+
+
+class TestCheckRegression:
+    def _compare(self, base, new, **kw):
+        from benchmarks.check_regression import compare
+
+        return compare(base, new, **kw)
+
+    def test_identical_passes(self):
+        cells = {("a",): 10.0, ("b",): 20.0, ("c",): 30.0}
+        report = self._compare(cells, dict(cells), tolerance=0.25)
+        assert report["violations"] == []
+
+    def test_uniform_slowdown_normalizes_away(self):
+        base = {("a",): 10.0, ("b",): 20.0, ("c",): 30.0}
+        new = {k: v * 10.0 for k, v in base.items()}  # a 10x slower machine
+        report = self._compare(base, new, tolerance=0.25)
+        assert report["violations"] == []
+        assert report["speed_factor"] == pytest.approx(10.0)
+
+    def test_relative_regression_flagged(self):
+        base = {("a",): 10.0, ("b",): 20.0, ("c",): 30.0}
+        new = {("a",): 100.0, ("b",): 200.0, ("c",): 600.0}  # c regressed 2x
+        report = self._compare(base, new, tolerance=0.25)
+        assert [v["cell"] for v in report["violations"]] == [["c"]]
+
+    def test_absolute_mode_flags_uniform_slowdown(self):
+        base = {("a",): 10.0, ("b",): 20.0}
+        new = {k: v * 2.0 for k, v in base.items()}
+        report = self._compare(base, new, tolerance=0.25, absolute=True)
+        assert len(report["violations"]) == 2
+
+    def test_insufficient_overlap_raises(self):
+        with pytest.raises(ValueError, match="overlap"):
+            self._compare({("a",): 1.0}, {("b",): 1.0}, tolerance=0.25)
+
+    def test_gate_against_committed_baselines(self):
+        """The committed BENCH files gate cleanly against themselves — the
+        shape of the CI perf-gate invocation."""
+        from benchmarks.check_regression import (
+            load,
+            plan_cells,
+            plan_selection_cells,
+            serve_cells,
+        )
+
+        doc = load(os.path.join(REPO, "BENCH_plan.json"))
+        plan = plan_cells(doc)
+        selections = plan_selection_cells(doc)
+        serve = serve_cells(load(os.path.join(REPO, "BENCH_serve.json")))
+        assert len(plan) >= 3 and len(selections) >= 9 and len(serve) >= 3
+        for cells in (plan, selections, serve):
+            report = self._compare(cells, dict(cells), tolerance=0.25)
+            assert report["violations"] == []
+
+    def test_plan_selections_are_deterministic_vs_baseline(self):
+        """CI's plan-gate layer: freshly computed planner selections must
+        estimate the committed baseline cells identically (model output vs
+        model output) — any drift is a planner/cost-model change, which is
+        exactly what the gate exists to catch (regen the baseline when the
+        change is intentional)."""
+        from benchmarks.check_regression import compare, load, plan_selection_cells
+        from benchmarks.plan_sweep import planner_selections
+
+        doc = load(os.path.join(REPO, "BENCH_plan.json"))
+        base = plan_selection_cells(doc)
+        fresh = {}
+        for backend in doc["planner"]:
+            for r in planner_selections(tuple(doc["sizes"]) + (4096, 16384), backend):
+                fresh[(backend, r["n"], f"{r['accuracy']:.3e}")] = float(r["est_t_us"])
+        report = compare(base, fresh, tolerance=0.0, absolute=True)
+        assert report["n_cells"] == len(base)
+        assert report["violations"] == []
+
+
+class TestDocsDrift:
+    def test_check_detects_stale_block(self, tmp_path, capsys):
+        from benchmarks.make_experiments_md import (
+            BEGIN_MARK,
+            END_MARK,
+            check_experiments_md,
+            write_experiments_md,
+        )
+
+        path = tmp_path / "EXPERIMENTS.md"
+        path.write_text(f"# doc\n\n{BEGIN_MARK}\nstale\n{END_MARK}\n")
+        assert not check_experiments_md(str(path))
+        write_experiments_md(str(path))
+        capsys.readouterr()
+        assert check_experiments_md(str(path))
