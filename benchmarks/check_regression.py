@@ -16,6 +16,13 @@ noise profile:
   microbenchmarks (~ms).  Too contention-sensitive for hosted CI at tight
   tolerances — meant for same-machine, before/after comparisons (pair with
   ``plan_sweep --stat min``).
+* **adapt** (``--adapt-new``): machine-independent *semantic* invariants of
+  the runtime-adaptation sweep (adapted meets its SLO, the cheap static
+  plan violates it, reconfiguration happened with zero recompiles) — the
+  CI layer.  The serve-style normalized tok/s ratio gate
+  (``--adapt-baseline``) is same-machine only: adapt cells are sub-second
+  spans that swing ~2x between identical runs on a busy host (the Cell G
+  finding again).
 
 CI runners are not the machine the baselines were measured on, so
 wall-clock comparisons are **normalized**: each cell's cost ratio
@@ -72,6 +79,74 @@ def serve_cells(doc: dict) -> dict[tuple, float]:
         acc = "unplanned" if c["accuracy"] is None else f"{c['accuracy']:.3e}"
         out[(c["slots"], acc)] = 1.0 / float(c["tok_s"])
     return out
+
+
+def adapt_cells(doc: dict) -> dict[tuple, float]:
+    """Adapt-sweep cells -> seconds-per-token, keyed (label, slo)."""
+    return {
+        (c["label"], f"{c['slo_err']:.3e}"): 1.0 / float(c["tok_s"])
+        for c in doc.get("cells", [])
+        if c.get("tok_s", 0) > 0
+    }
+
+
+def adapt_semantics(doc: dict, *, check_throughput: bool = False) -> list[str]:
+    """Machine-independent invariants of a fresh BENCH_adapt.json — the
+    run-time-reconfiguration claim itself, not a wall-clock ratio:
+
+      * the adapted run meets every SLO it was given (probe hit rate);
+      * the cheapest static plan violates at least one of those SLOs
+        (otherwise the sweep isn't exercising the adaptation at all);
+      * the adapted run actually reconfigured (mode switches > 0) inside a
+        single compiled step.
+
+    ``check_throughput`` adds "adapted tok/s >= 0.9x static-safe" (the loop
+    must not cost more than just planning safe statically).  That one IS a
+    wall-clock comparison of sub-second spans, so it is same-machine only
+    (baseline-generation time, ``--adapt-strict``) — on hosted CI it is
+    reported as a warning, not a failure.
+
+    Returns a list of violation strings (empty = pass).
+    """
+    problems = []
+    by_slo: dict[float, dict[str, dict]] = {}
+    for c in doc.get("cells", []):
+        by_slo.setdefault(c["slo_err"], {})[c["label"]] = c
+    if not by_slo:
+        return ["no adapt cells found"]
+    cheap_violates_somewhere = False
+    for slo, cells in sorted(by_slo.items()):
+        adapted = cells.get("adapted")
+        cheap = cells.get("static-cheap")
+        safe = cells.get("static-safe")
+        if adapted is None:
+            problems.append(f"slo={slo}: no adapted cell")
+            continue
+        if not adapted.get("meets_slo"):
+            problems.append(
+                f"slo={slo}: adapted run misses the SLO "
+                f"(hit rate {adapted.get('slo_hit_rate')})")
+        if adapted.get("mode_switches", 0) < 1:
+            problems.append(f"slo={slo}: adapted run never reconfigured")
+        if adapted.get("compiled_steps") not in (None, 1):
+            problems.append(
+                f"slo={slo}: adapted run recompiled "
+                f"({adapted['compiled_steps']} step variants)")
+        if cheap is not None and not cheap.get("meets_slo"):
+            cheap_violates_somewhere = True
+        if safe is not None and adapted["tok_s"] < 0.9 * safe["tok_s"]:
+            msg = (f"slo={slo}: adapted {adapted['tok_s']} tok/s fell below "
+                   f"static-safe {safe['tok_s']} tok/s")
+            if check_throughput:
+                problems.append(msg)
+            else:
+                print(f"adapt (semantics): WARN {msg} (wall-clock; gate "
+                      "with --adapt-strict on a quiet same machine)")
+    if not cheap_violates_somewhere:
+        problems.append(
+            "static-cheap meets every SLO in the sweep: the workload is not "
+            "exercising adaptation")
+    return problems
 
 
 def compare(
@@ -153,6 +228,20 @@ def main(argv: list[str] | None = None) -> int:
     )
     ap.add_argument("--serve-baseline", default="")
     ap.add_argument("--serve-new", default="")
+    ap.add_argument("--adapt-baseline", default="")
+    ap.add_argument(
+        "--adapt-new",
+        default="",
+        help="fresh BENCH_adapt.json; always checked for the machine-"
+        "independent adaptation invariants, and ratio-gated against "
+        "--adapt-baseline when one is given",
+    )
+    ap.add_argument(
+        "--adapt-strict",
+        action="store_true",
+        help="also fail on the adapted-vs-safe throughput invariant "
+        "(wall-clock: same-machine use only)",
+    )
     ap.add_argument(
         "--tolerance",
         type=float,
@@ -189,6 +278,23 @@ def main(argv: list[str] | None = None) -> int:
             serve_cells(load(args.serve_new)),
             args,
         )
+    if args.adapt_new:
+        ran = True
+        doc = load(args.adapt_new)
+        problems = adapt_semantics(doc, check_throughput=args.adapt_strict)
+        for p in problems:
+            print(f"adapt (semantics): FAIL {p}")
+        if not problems:
+            print("adapt (semantics): ok (adapted meets SLO, cheap static "
+                  "violates, reconfigured with zero recompiles)")
+        ok &= not problems
+        if args.adapt_baseline:
+            ok &= _gate(
+                "adapt",
+                adapt_cells(load(args.adapt_baseline)),
+                adapt_cells(doc),
+                args,
+            )
     if not ran:
         print("nothing to compare: pass --plan-baseline/--plan-new and/or --serve-*")
         return 2

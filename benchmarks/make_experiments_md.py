@@ -1,8 +1,9 @@
 """Regenerate the EXPERIMENTS.md generated tables: the planner sweep from
 BENCH_plan.json (benchmarks/plan_sweep.py), the tuner's measured-vs-modeled
 comparison from BENCH_tune.json (benchmarks/tune_sweep.py), the serve sweep
-from BENCH_serve.json (benchmarks/serve_sweep.py) and, when present, the
-dry-run + roofline tables from experiments/dryrun/*.json.
+from BENCH_serve.json (benchmarks/serve_sweep.py), the runtime-adaptation
+sweep from BENCH_adapt.json (benchmarks/adapt_sweep.py) and, when present,
+the dry-run + roofline tables from experiments/dryrun/*.json.
 
     PYTHONPATH=src python -m benchmarks.plan_sweep          # produce BENCH_plan.json
     PYTHONPATH=src python -m benchmarks.serve_sweep         # produce BENCH_serve.json
@@ -23,6 +24,7 @@ DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryru
 BENCH_PLAN = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
 BENCH_TUNE = os.path.join(os.path.dirname(__file__), "..", "BENCH_tune.json")
 BENCH_SERVE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+BENCH_ADAPT = os.path.join(os.path.dirname(__file__), "..", "BENCH_adapt.json")
 EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
 BEGIN_MARK = "<!-- BEGIN GENERATED (benchmarks/make_experiments_md.py) -->"
 END_MARK = "<!-- END GENERATED -->"
@@ -225,15 +227,17 @@ def load_bench_serve(path: str = BENCH_SERVE) -> dict | None:
 
 
 def serve_table(doc: dict) -> list[str]:
-    out = ["| slots | accuracy | modes (prefill/decode) | tok/s | TTFT | latency | occupancy | steps |",
-           "|---|---|---|---|---|---|---|---|"]
+    out = ["| slots | accuracy | modes (prefill/decode) | tok/s | TTFT | latency | occupancy | steps | switches | mode occupancy |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
     for r in doc.get("cells", []):
         acc = f"{r['accuracy']:.1e}" if r["accuracy"] else "unplanned"
+        mocc = " ".join(f"{m}:{f:.2f}"
+                        for m, f in r.get("mode_occupancy", {}).items()) or "-"
         out.append(
             f"| {r['slots']} | {acc} | {r['mode_prefill']}/{r['mode_decode']} "
             f"| {r['tok_s']:.1f} | {fmt_s(r['ttft_mean_s'])} "
             f"| {fmt_s(r['latency_mean_s'])} | {r['occupancy']:.2f} "
-            f"| {r['decode_steps']} |"
+            f"| {r['decode_steps']} | {r.get('mode_switches', 0)} | {mocc} |"
         )
     return out
 
@@ -255,6 +259,48 @@ def serve_section() -> list[str]:
         "",
     ]
     return parts
+
+
+def load_bench_adapt(path: str = BENCH_ADAPT) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def adapt_table(doc: dict) -> list[str]:
+    out = ["| slo (max err) | run | tok/s | err mean | err max | SLO hit rate | switches | mode occupancy |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in doc.get("cells", []):
+        mocc = " ".join(f"{m}:{f:.2f}"
+                        for m, f in r.get("mode_occupancy", {}).items()) or "-"
+        hit = (f"{r['slo_hit_rate']:.2f}" if r.get("slo_hit_rate") is not None
+               else "-")
+        meets = "yes" if r.get("meets_slo") else "**no**"
+        out.append(
+            f"| {r['slo_err']:g} | {r['label']} | {r['tok_s']:.1f} "
+            f"| {r['err_mean']:.3g} | {r['err_max']:.3g} | {hit} ({meets}) "
+            f"| {r['mode_switches']} | {mocc} |"
+        )
+    return out
+
+
+def adapt_section() -> list[str]:
+    doc = load_bench_adapt()
+    if doc is None:
+        return ["### Adapt sweep\n",
+                "_BENCH_adapt.json not found — run "
+                "`python -m benchmarks.adapt_sweep` first._\n"]
+    return [
+        f"### Adapt sweep (BENCH_adapt.json, host={doc['host_backend']}, "
+        f"{doc['requests']} requests over normal/hot/normal phases)\n",
+        "Closed-loop runtime precision adaptation (`repro.adapt`) vs the "
+        "static plans on the conditioned workload: the adapted run starts "
+        "at the cheap plan's modes, shifts up for the ill-conditioned "
+        "burst and back down after — inside one compiled step:\n",
+        "\n".join(adapt_table(doc)),
+        "",
+    ]
 
 
 def generated_sections() -> str:
@@ -280,6 +326,7 @@ def generated_sections() -> str:
                      "`python -m benchmarks.plan_sweep` first._\n")
     parts.extend(tune_section())
     parts.extend(serve_section())
+    parts.extend(adapt_section())
     recs = load("paper_baseline")
     if recs:
         n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
@@ -352,6 +399,7 @@ def main() -> None:
         print("\n".join(plan_selection_table(doc)) + "\n")
     print("\n".join(tune_section()) + "\n")
     print("\n".join(serve_section()) + "\n")
+    print("\n".join(adapt_section()) + "\n")
     recs = load(policy)
     n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
     n_na = sum(1 for r in recs.values() if r["status"] == "n/a")

@@ -81,6 +81,10 @@ def sweep_cell(model, params, slots: int, accuracy: float | None,
         "decode_steps": s["decode_steps"],
         "mode_prefill": modes.get("prefill"),
         "mode_decode": modes.get("decode"),
+        # runtime-adaptation observability (repro.adapt): static engines
+        # report 0 switches and all steps under the planned decode mode
+        "mode_switches": s["mode_switches"],
+        "mode_occupancy": {k: round(v, 3) for k, v in s["mode_occupancy"].items()},
         "n_ok": len([r for r in reqs if outs.get(r.rid)]),
     }
 

@@ -1,0 +1,36 @@
+"""repro.adapt — closed-loop run-time precision adaptation.
+
+The paper's headline property — "adjust the power and delay requirements
+according to different accuracy requirements by reconfiguring itself during
+run time" — as a feedback loop over the RMPM engine:
+
+    runtime_policy.py  mutable site->mode table + trace-time mode binding
+                       (the mode-select bits as jit arguments: zero recompiles)
+    probe.py           online error probes (shadow-forward logit residual,
+                       sampled-row matmul residual, grad-norm drift)
+    controller.py      SLO + dual-threshold hysteresis controller, and the
+                       training-loop precision schedule
+    workload.py        the synthetic ill-conditioned serving workload that
+                       exercises the loop end to end (tests + adapt_sweep)
+
+The planner's static pick (repro.plan) is the mode table's initial
+condition; `ServeEngine(slo=...)` and `train_loop(adapt=...)` close the
+loop.  See DESIGN.md section Runtime adaptation.
+"""
+from repro.adapt.controller import (  # noqa: F401
+    SLO,
+    HysteresisController,
+    TrainPrecisionSchedule,
+)
+from repro.adapt.probe import (  # noqa: F401
+    GradDriftProbe,
+    logit_residual,
+    sampled_matmul_residual,
+    softmax_tv,
+)
+from repro.adapt.runtime_policy import (  # noqa: F401
+    DEFAULT_SITES,
+    ModeTable,
+    bind_modes,
+    runtime_mode_for,
+)

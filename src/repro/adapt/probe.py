@@ -1,0 +1,124 @@
+"""Cheap online error probes for the runtime adaptation loop.
+
+The controller needs a live estimate of the numerical error the *current*
+mode table inflicts.  Truth is unavailable online, so the probes compare
+against the most precise runtime-switchable configuration — the mode table
+shifted to its max (M24), run through the SAME compiled step with different
+mode scalars (zero recompiles; that shared executable is the point of
+`repro.adapt.runtime_policy`).  Three signals, cheapest first:
+
+  * :func:`logit_residual` — normalized max-abs logit deviation between a
+    low-mode and reference forward, masked to active slots.  Scale-
+    normalized by the reference logit spread so one SLO threshold works
+    across workloads; softmax-space total variation (:func:`softmax_tv`) is
+    available when the caller cares about sampling fidelity rather than raw
+    numerics.
+  * :func:`sampled_matmul_residual` — the ISSUE's "sampled-row residual vs
+    a one-mode-up shadow matmul": re-multiplies a row sample of one GEMM at
+    ``mode`` and ``mode+1`` and reports the relative gap.  O(sample·K·N)
+    instead of O(M·K·N) — a per-call-site probe for hosts that cannot
+    afford shadow forwards.
+  * :class:`GradDriftProbe` — EWMA drift of the gradient norm, the training
+    loop's error surrogate (loss-scale blowups and underflow both announce
+    themselves as grad-norm drift long before the loss diverges).
+
+Probe cost is budgeted by the caller (`ServeEngine(adapt_every=N)` probes
+every N decode steps: two shadow forwards per probe, amortized 2/N of a
+step).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import Mode
+from repro.core.rmpm import mp_matmul
+
+Array = jax.Array
+
+_EPS = 1e-9
+
+
+def logit_residual(logits_lo: Array, logits_ref: Array,
+                   active: Array | None = None) -> Array:
+    """max over active rows of max-abs logit deviation, normalized by the
+    reference row's logit spread (std): a scale-free observed-error metric.
+
+    Args:
+      logits_lo / logits_ref: (B, V) last-position logits of the probed and
+        reference forwards.
+      active: (B,) bool — rows currently serving a request; inactive rows
+        are frozen state and carry no meaningful logits.
+    """
+    diff = jnp.max(jnp.abs(logits_lo - logits_ref), axis=-1)  # (B,)
+    spread = jnp.std(logits_ref, axis=-1) + _EPS
+    err = diff / spread
+    if active is not None:
+        err = jnp.where(active, err, 0.0)
+    return jnp.max(err)
+
+
+def softmax_tv(logits_lo: Array, logits_ref: Array,
+               active: Array | None = None) -> Array:
+    """Total-variation distance between next-token distributions (max over
+    active rows) — the sampling-fidelity view of the same residual."""
+    tv = 0.5 * jnp.sum(
+        jnp.abs(jax.nn.softmax(logits_lo, axis=-1)
+                - jax.nn.softmax(logits_ref, axis=-1)),
+        axis=-1,
+    )
+    if active is not None:
+        tv = jnp.where(active, tv, 0.0)
+    return jnp.max(tv)
+
+
+def sampled_matmul_residual(
+    x: Array,
+    w: Array,
+    mode: Mode | int,
+    *,
+    sample_rows: int = 4,
+    key: Array | None = None,
+    rounding: str = "rne",
+) -> Array:
+    """Relative error of ``x @ w`` at ``mode`` vs one mode up, on a row
+    sample of ``x``.  Returns a scalar: max-abs deviation / max-abs of the
+    shadow result.  ``mode`` at the top of the f32 ladder returns 0 (there
+    is no switchable mode above to shadow with)."""
+    mode = Mode(mode)
+    up = Mode(min(int(mode) + 1, int(Mode.M24)))
+    n = x.shape[0]
+    k = min(sample_rows, n)
+    if key is None:
+        rows = jnp.arange(k)
+    else:
+        rows = jax.random.choice(key, n, shape=(k,), replace=False)
+    xs = x[rows]
+    lo = mp_matmul(xs, w, mode, rounding=rounding)
+    hi = mp_matmul(xs, w, up, rounding=rounding)
+    return jnp.max(jnp.abs(lo - hi)) / (jnp.max(jnp.abs(hi)) + _EPS)
+
+
+@dataclasses.dataclass
+class GradDriftProbe:
+    """EWMA drift of the gradient norm: ``drift = |gn - ewma| / ewma``.
+
+    Warmup steps (the first ``warmup`` observations) return 0 — compile-step
+    and init transients must not trigger mode shifts.
+    """
+
+    alpha: float = 0.1
+    warmup: int = 3
+    ewma: float = 0.0
+    n: int = 0
+
+    def update(self, grad_norm: float) -> float:
+        self.n += 1
+        if self.n <= self.warmup:
+            self.ewma = grad_norm
+            return 0.0
+        drift = abs(grad_norm - self.ewma) / (self.ewma + _EPS)
+        self.ewma += self.alpha * (grad_norm - self.ewma)
+        return drift

@@ -30,6 +30,7 @@ from repro.core.policy import (  # noqa: F401
 )
 from repro.core.rmpm import (  # noqa: F401
     mp_einsum,
+    mp_einsum_runtime,
     mp_linear,
     mp_matmul,
     mp_matmul_runtime,

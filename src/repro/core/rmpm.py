@@ -144,9 +144,20 @@ def mp_einsum(
     *,
     rounding: str = "rne",
     impl: str = "xla",
+    block: tuple[int, int, int] | None = None,
 ) -> Array:
-    """Multi-precision einsum through the RMPM engine (two-operand)."""
+    """Multi-precision einsum through the RMPM engine (two-operand).
+
+    ``block`` carries the autotuner's Pallas (bm, bn, bk) tile override: it
+    is honoured when ``impl='pallas'`` and ``eq`` is the plain 2D matmul
+    contraction (dispatched to the fused kernel), and ignored otherwise —
+    general einsum contractions run the XLA limb algebra, whose tiling XLA
+    owns (same contract as ``mp_matmul``).
+    """
     mode = Mode(mode)
+    if impl == "pallas" and eq == "mk,kn->mn" and mode != Mode.AUTO:
+        return mp_matmul(a, b, mode, rounding=rounding, impl="pallas",
+                         block=block)
     if impl == "native" or mode == Mode.AUTO:
         if mode == Mode.AUTO:
             raise ValueError("AUTO requires mp_matmul_runtime / mp_einsum_runtime")
@@ -223,25 +234,83 @@ def mp_matmul_runtime(
     *,
     rounding: str = "rne",
     auto_tol: float = 0.0,
+    impl: str = "xla",
+    block: tuple[int, int, int] | None = None,
+    allow_auto: bool = True,
 ) -> Array:
     """Runtime-reconfigurable matmul over the f32 mode set {M8, M16, M24}.
 
     ``mode`` may be a traced int32 scalar (the paper's mode-select bits) — the
     executable contains all three branches but only the selected one runs.
     ``Mode.AUTO`` (0) probes operands and picks the cheapest adequate mode.
+
+    ``impl``/``block`` plumb the planner's execution choice and the
+    autotuner's Pallas tile override into every branch, so an adapted
+    call-site (repro.adapt) keeps its tuned blocks when the mode scalar
+    changes — the tile shape is a property of the GEMM geometry, not of the
+    limb count.
+
+    ``allow_auto=False`` asserts the scalar is a concrete mode (1..3), never
+    ``Mode.AUTO``: the operand-occupancy probe is skipped entirely.  The
+    probe costs a full read of both operands (3 rounds of casts +
+    reductions), and ``jnp.where`` evaluates it even when the scalar is
+    never 0 — for memory-bound GEMMs that multiplies the step cost.  The
+    adaptation loop (repro.adapt), whose mode tables only hold concrete
+    modes, uses this path.
     """
     if isinstance(mode, Mode) and mode != Mode.AUTO:
-        return mp_matmul(a, b, mode, rounding=rounding)
+        return mp_matmul(a, b, mode, rounding=rounding, impl=impl, block=block)
     mode_scalar = jnp.asarray(mode, jnp.int32)
-    selected = jnp.where(
-        mode_scalar == int(Mode.AUTO),
-        auto_mode(a, b, tol=auto_tol, max_mode=Mode.M24),
-        mode_scalar,
-    )
+    if allow_auto:
+        selected = jnp.where(
+            mode_scalar == int(Mode.AUTO),
+            auto_mode(a, b, tol=auto_tol, max_mode=Mode.M24),
+            mode_scalar,
+        )
+    else:
+        selected = mode_scalar
     branches = [
-        functools.partial(mp_matmul, mode=m, rounding=rounding) for m in F32_MODES
+        functools.partial(mp_matmul, mode=m, rounding=rounding, impl=impl,
+                          block=block)
+        for m in F32_MODES
     ]
     return jax.lax.switch(jnp.clip(selected - 1, 0, len(branches) - 1), branches, a, b)
+
+
+def mp_einsum_runtime(
+    eq: str,
+    a: Array,
+    b: Array,
+    mode: Array | int,
+    *,
+    rounding: str = "rne",
+    impl: str = "xla",
+    block: tuple[int, int, int] | None = None,
+) -> Array:
+    """Runtime-switchable einsum over the f32 mode set {M8, M16, M24} —
+    ``mp_matmul_runtime``'s contraction-generic sibling, used by the adapted
+    ``pein`` call-sites (attention scores / attention-value).
+
+    ``impl``/``block`` are forwarded to every branch under the same contract
+    as :func:`mp_einsum` (``block`` only takes effect for the pallas 2D
+    matmul dispatch).  ``impl='native'`` is rejected: its branches would all
+    compute the same plain f32 einsum, silently turning the mode switch into
+    a no-op — callers wanting native execution should not bind the site.
+    """
+    if impl == "native":
+        raise ValueError(
+            "impl='native' ignores the mode: a runtime switch over identical "
+            "branches is a no-op; use the static mp_einsum instead"
+        )
+    mode_scalar = jnp.asarray(mode, jnp.int32)
+    branches = [
+        functools.partial(mp_einsum, eq, mode=m, rounding=rounding, impl=impl,
+                          block=block)
+        for m in F32_MODES
+    ]
+    return jax.lax.switch(
+        jnp.clip(mode_scalar - 1, 0, len(branches) - 1), branches, a, b
+    )
 
 
 def mp_matmul_runtime_df32(

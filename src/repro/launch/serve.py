@@ -10,6 +10,12 @@ mode boundary flips the mode bits *between phases of the same workload*
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --requests 8 --slots 4 --arrival-rate 2 --accuracy 1e-3 [--kv-int8]
+
+Pass ``--adapt`` (with ``--slo-err``, optionally ``--slo-ms``) to close the
+loop at run time: the decode phase's planned modes become a mutable mode
+table that repro.adapt's probe + hysteresis controller retunes against the
+SLO between steps — one compiled step, the mode scalars select the live
+``lax.switch`` branches (zero recompiles).
 """
 from __future__ import annotations
 
@@ -72,6 +78,18 @@ def main() -> None:
                          "repro.tune) for the per-phase planner; empty = "
                          "TUNE_TABLE env var, then pure roofline")
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--adapt", action="store_true",
+                    help="closed-loop runtime precision adaptation of the "
+                         "decode phase (repro.adapt)")
+    ap.add_argument("--slo-err", type=float, default=0.05,
+                    help="SLO: max observed relative error (probe logit "
+                         "residual vs the max-mode reference)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="SLO: decode-step latency target in ms (0 = none); "
+                         "overshooting applies downward mode pressure "
+                         "within the error SLO")
+    ap.add_argument("--adapt-every", type=int, default=4,
+                    help="probe cadence in decode steps")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -91,11 +109,17 @@ def main() -> None:
                            args.max_new, rng)
     slots = args.slots or max(args.requests, 1)
     max_len = args.prompt_len + args.max_new + 8
+    slo = None
+    if args.adapt:
+        from repro.adapt import SLO
+
+        slo = SLO(max_err=args.slo_err, target_ms=args.slo_ms or None)
     eng = ServeEngine(
         model, params, batch_slots=slots, max_len=max_len,
         accuracy=args.accuracy,
         prefill_tokens=max(args.prompt_len // 2, 1),
         tune_table=args.tune_table or None,
+        slo=slo, adapt_every=args.adapt_every,
     )
     t0 = time.perf_counter()
     outs = run_open_loop(eng, reqs, args.arrival_rate, rng)
@@ -103,6 +127,9 @@ def main() -> None:
     for rid in sorted(outs):
         print(f"req {rid}: {outs[rid]}")
     print(f"plans:\n{eng.describe_plans()}")
+    if args.adapt:
+        print(f"adaptation: {eng.describe_adaptation()}")
+        print(f"compiled decode-step variants: {eng.decode_compile_count}")
     stats = plan_cache_stats()
     print(f"plan cache: {stats.entries} entries, "
           f"{stats.hits} hits / {stats.misses} misses (process-wide)")

@@ -51,6 +51,17 @@ def main() -> None:
     ap.add_argument("--mesh", default="", help="e.g. '4,2' for (data=4, model=2)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument(
+        "--adapt", action="store_true",
+        help="grad-norm-drift precision schedule (repro.adapt): the train "
+             "step compiles once with runtime mode scalars; the schedule "
+             "relaxes precision down the RMPM ladder while the grad norm is "
+             "stable and shifts it back up on drift spikes",
+    )
+    ap.add_argument("--slo-err", type=float, default=0.5,
+                    help="adapt: max tolerated relative grad-norm drift")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="adapt: per-step latency target in ms (0 = none)")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -82,6 +93,25 @@ def main() -> None:
         mesh = jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
 
     step_fn = make_train_step(model, tcfg, mesh)
+    schedule = None
+    if args.adapt:
+        from repro.adapt import (
+            SLO,
+            ModeTable,
+            TrainPrecisionSchedule,
+            bind_modes,
+        )
+
+        table = ModeTable.from_policy(cfg.policy)
+        schedule = TrainPrecisionSchedule(
+            table, SLO(max_err=args.slo_err, target_ms=args.slo_ms or None))
+        inner_step = step_fn
+
+        def step_fn(state, batch, modes):  # noqa: F811 — modal wrapper
+            with bind_modes(modes):
+                return inner_step(state, batch)
+
+        print(f"adaptive precision schedule: start {table.describe()}")
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch, seed=0)
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
@@ -92,8 +122,10 @@ def main() -> None:
             "params": p_shard,
             "opt": {"step": replicated(mesh), "m": p_shard, "v": p_shard},
         }
+        shardings = ((state_shard, None, None) if schedule is not None
+                     else (state_shard, None))
         with jax.set_mesh(mesh):
-            step = jax.jit(step_fn, in_shardings=(state_shard, None), donate_argnums=0)
+            step = jax.jit(step_fn, in_shardings=shardings, donate_argnums=0)
             start, state = resume_or_init(
                 mgr, lambda: init_train_state(model, jax.random.key(0), tcfg), state_shard
             )
@@ -116,10 +148,12 @@ def main() -> None:
             state, hist = train_loop(
                 step, state, pf,
                 LoopConfig(total_steps=args.steps, checkpoint_every=args.checkpoint_every),
-                ckpt_manager=mgr, start_step=start,
+                ckpt_manager=mgr, start_step=start, adapt=schedule,
                 on_metrics=lambda r: print(
                     f"step {r['step']:5d} loss {r['loss']:.4f} gnorm {r['grad_norm']:.2f} "
-                    f"dt {r['dt']*1e3:.0f}ms" + (" STRAGGLER" if r["straggler"] else "")
+                    f"dt {r['dt']*1e3:.0f}ms"
+                    + (f" mode {r['mode']}" if "mode" in r else "")
+                    + (" STRAGGLER" if r["straggler"] else "")
                 ),
             )
     finally:
@@ -127,6 +161,14 @@ def main() -> None:
     first = np.mean([h["loss"] for h in hist[:5]])
     last = np.mean([h["loss"] for h in hist[-5:]])
     print(f"loss {first:.4f} -> {last:.4f}")
+    if schedule is not None:
+        modes = [h.get("mode") for h in hist if "mode" in h]
+        timeline = [modes[0]] if modes else []
+        for m in modes[1:]:
+            if m != timeline[-1]:
+                timeline.append(m)
+        print(f"precision schedule: {' -> '.join(timeline)} "
+              f"({schedule.table.switches} switches)")
 
 
 class _null:

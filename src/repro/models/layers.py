@@ -9,8 +9,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.adapt.runtime_policy import runtime_mode_for
 from repro.core.policy import PrecisionPolicy
-from repro.core.rmpm import mp_einsum
+from repro.core.precision import F32_MODES, DoubleF32
+from repro.core.rmpm import mp_einsum, mp_einsum_runtime, mp_matmul_runtime
 from repro.plan import execute, plan_matmul
 
 Array = jax.Array
@@ -26,7 +28,16 @@ def pmm(x: Array, w: Array, op: str, policy: PrecisionPolicy) -> Array:
     (the paper's application-program-driven mode-select bits), the planner
     (repro.plan) selects Strassen depth and — when ``policy.impl='auto'`` —
     the execution impl.  Planning happens at trace time on static shapes and
-    is cached, so a scanned layer stack plans each distinct GEMM once."""
+    is cached, so a scanned layer stack plans each distinct GEMM once.
+
+    When the call-site is bound to a runtime mode scalar (repro.adapt's
+    ``bind_modes``, installed by the adaptive serve/train steps), the plan's
+    static mode becomes merely the initial condition: execution routes
+    through ``mp_matmul_runtime``'s ``lax.switch`` with the plan's
+    impl/tuned block preserved, and the scalar — a jit argument — selects
+    the live branch with zero recompiles.  Only f32-ladder plans are
+    switchable; DF32/Strassen plans keep their static path.
+    """
     plan = plan_matmul(
         tuple(x.shape),
         tuple(w.shape),
@@ -35,12 +46,44 @@ def pmm(x: Array, w: Array, op: str, policy: PrecisionPolicy) -> Array:
         rounding=policy.rounding,
         max_depth=policy.max_strassen_depth,
     )
+    rt_mode = runtime_mode_for(op)
+    if (
+        rt_mode is not None
+        and plan.mode in F32_MODES
+        and plan.dtype == "float32"
+        and not isinstance(x, DoubleF32)
+    ):
+        # runtime reconfiguration wins over the plan's Strassen depth: the
+        # switch branches are classical (depth applies per static mode only).
+        # Mode tables hold concrete modes, so the AUTO operand probe is
+        # skipped (allow_auto=False — it would re-read both operands).
+        return mp_matmul_runtime(
+            x, w, rt_mode, rounding=plan.rounding,
+            impl=plan.impl if plan.impl in ("xla", "pallas") else "xla",
+            block=plan.block, allow_auto=False,
+        )
     return execute(plan, x, w)
 
 
 def pein(eq: str, a: Array, b: Array, op: str, policy: PrecisionPolicy) -> Array:
+    mode = policy.mode_for(op)
+    rt_mode = runtime_mode_for(op)
+    if (
+        rt_mode is not None
+        and mode in F32_MODES
+        and not isinstance(a, DoubleF32)
+        and not isinstance(b, DoubleF32)
+    ):
+        # bound sites always run the limb engine: a 'native' policy impl
+        # (plain f32, mode-blind) cannot express a mode switch, so the xla
+        # limb algebra is the runtime path even for native policies —
+        # adaptation trades the native fast path for reconfigurability
+        impl = policy.impl if policy.impl in ("xla", "pallas") else "xla"
+        return mp_einsum_runtime(
+            eq, a, b, rt_mode, rounding=policy.rounding, impl=impl
+        )
     return mp_einsum(
-        eq, a, b, policy.mode_for(op), rounding=policy.rounding, impl=policy.impl
+        eq, a, b, mode, rounding=policy.rounding, impl=policy.impl
     )
 
 

@@ -30,6 +30,8 @@ cache stream through unchanged (DESIGN.md section Serving).
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -98,7 +100,19 @@ class ServeEngine:
                  plan_backend: str | None = None,
                  prefill_tokens: int | None = None,
                  decode_accuracy_scale: float | None = None,
-                 tune_table=None):
+                 tune_table=None,
+                 slo=None, adapt_every: int = 4, adapt: bool = True,
+                 controller=None):
+        """``slo`` (repro.adapt.SLO) turns on closed-loop runtime precision
+        adaptation of the decode phase: the planner's decode modes become a
+        mutable ModeTable whose int32 scalars feed one compiled masked step
+        (``lax.switch`` branch select — zero recompiles across mode changes);
+        every ``adapt_every`` decode steps a probe runs the same executable
+        at the max-mode reference and one mode down, and the hysteresis
+        controller shifts the table against the SLO.  ``adapt=False`` keeps
+        the probes and mode timeline (monitoring) but never shifts — the
+        instrumented static baseline the adapt benchmark compares against.
+        """
         # metrics first: its plan-cache snapshot must predate phase planning
         # so plan_cache_delta() counts the plans this engine triggers
         self.metrics = ServeMetrics(batch_slots)
@@ -143,6 +157,28 @@ class ServeEngine:
         # host-side slot mirrors
         self._active = np.zeros((batch_slots,), bool)
         self._last_tok = np.zeros((batch_slots,), np.int32)
+        # -- runtime adaptation (repro.adapt) --------------------------------
+        self.slo = slo
+        self._adapt = bool(adapt)
+        self._last_step_ms: float | None = None
+        if self.phase_plans:
+            self._static_decode_label = self.phase_plans["decode"]["mlp_up"].mode.name
+        else:
+            self._static_decode_label = model.cfg.policy.default.name
+        if slo is not None:
+            from repro.adapt import HysteresisController, ModeTable
+
+            if self.phase_plans:
+                self.mode_table = ModeTable.from_plans(self.phase_plans["decode"])
+            else:
+                self.mode_table = ModeTable.from_policy(model.cfg.policy)
+            self.controller = controller or HysteresisController(slo)
+            self.adapt_every = max(int(adapt_every), 1)
+            self._step_modal = jax.jit(self._masked_step_modal)
+            self._probe = jax.jit(self._probe_fn)
+        else:
+            self.mode_table = None
+            self.controller = None
 
     # -- compiled pieces -----------------------------------------------------
 
@@ -170,6 +206,42 @@ class ServeEngine:
             self._axes, state, solo,
         )
 
+    def _masked_step_modal(self, params, tokens, state, active, modes):
+        """The masked step with the mode table bound: ``modes`` is a dict of
+        int32 scalars (jit arguments), so every table mutation between steps
+        re-dispatches the ``lax.switch`` branches of one executable — the
+        paper's run-time reconfiguration, no recompile."""
+        from repro.adapt import bind_modes
+
+        with bind_modes(modes):
+            logits, new_state = self.model_decode.decode_step(
+                params, tokens, state)
+
+        def sel(ax, new, old):
+            shape = [1] * new.ndim
+            shape[ax] = active.shape[0]
+            return jnp.where(active.reshape(shape), new, old)
+
+        merged = jax.tree.map(sel, self._axes, new_state, state)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), merged
+
+    def _probe_fn(self, params, tokens, state, active, cur, ref, down):
+        """Shadow-forward error probe: the decode step replayed at the
+        current, max-mode-reference and one-mode-down tables (same compiled
+        executable, different mode scalars; state discarded).  Returns
+        (err_current, err_one_down) as the normalized logit residual over
+        active slots (repro.adapt.probe)."""
+        from repro.adapt import bind_modes, logit_residual
+
+        def fwd(modes):
+            with bind_modes(modes):
+                logits, _ = self.model_decode.decode_step(params, tokens, state)
+            return logits[:, -1]
+
+        l_cur, l_ref, l_down = fwd(cur), fwd(ref), fwd(down)
+        return (logit_residual(l_cur, l_ref, active),
+                logit_residual(l_down, l_ref, active))
+
     # -- streaming API -------------------------------------------------------
 
     def submit(self, req: Request) -> int:
@@ -191,20 +263,58 @@ class ServeEngine:
             events.append((ticket.rid, first))
             self._emit(ticket, slot, first)
         if self._active.any():
-            next_tok, self.state = self._step(
-                self.params,
-                jnp.asarray(self._last_tok[:, None]),
-                self.state,
-                jnp.asarray(self._active),
+            tokens = jnp.asarray(self._last_tok[:, None])
+            active = jnp.asarray(self._active)
+            t0 = time.perf_counter()
+            if self.slo is not None:
+                next_tok, self.state = self._step_modal(
+                    self.params, tokens, self.state, active,
+                    self.mode_table.scalars(),
+                )
+            else:
+                next_tok, self.state = self._step(
+                    self.params, tokens, self.state, active)
+            produced = np.asarray(next_tok)  # syncs the step
+            self._last_step_ms = (time.perf_counter() - t0) * 1e3
+            self.metrics.on_decode_step(
+                int(self._active.sum()),
+                mode=(self.mode_table.label() if self.mode_table is not None
+                      else self._static_decode_label),
             )
-            self.metrics.on_decode_step(int(self._active.sum()))
-            produced = np.asarray(next_tok)
             for slot in np.nonzero(self._active)[0]:
                 ticket = self.scheduler.by_slot[int(slot)]
                 tok = int(produced[slot])
                 events.append((ticket.rid, tok))
                 self._emit(ticket, int(slot), tok)
+            if (self.slo is not None
+                    and self.metrics.decode_steps % self.adapt_every == 0
+                    and self._active.any()):
+                self._adapt_tick()
         return events
+
+    def _adapt_tick(self) -> None:
+        """One probe + controller observation; applies the shift when
+        adaptation is enabled (monitor-only engines record but hold)."""
+        table = self.mode_table
+        ladder = int(table.max_mode) - int(table.min_mode)
+        err_cur, err_down = self._probe(
+            self.params,
+            jnp.asarray(self._last_tok[:, None]),
+            self.state,
+            jnp.asarray(self._active),
+            table.scalars(),
+            table.scalars_shifted(ladder),  # clamps every site to max: ref
+            table.scalars_shifted(-1),
+        )
+        err_cur, err_down = float(err_cur), float(err_down)
+        self.metrics.on_probe(err_cur)
+        decision = self.controller.observe(
+            self.metrics.decode_steps, err_cur, err_down,
+            step_ms=self._last_step_ms,
+            can_up=not table.at_max, can_down=not table.at_min)
+        if self._adapt and decision:
+            if table.shift_all(decision, tag=self.metrics.decode_steps):
+                self.metrics.on_mode_switch()
 
     def drain(self) -> dict[int, list[int]]:
         """Step until queue and slots are empty; returns rid -> tokens for
@@ -240,6 +350,31 @@ class ServeEngine:
         if not self.plans:
             return "unplanned (explicit policy)"
         return "\n".join(f"{op}: {p.describe()}" for op, p in self.plans.items())
+
+    @property
+    def decode_compile_count(self) -> int | None:
+        """Number of compiled decode-step variants (None when jax does not
+        expose the cache).  Stays 1 across arbitrary mode-table changes —
+        the zero-recompile property tests/test_adapt.py pins."""
+        fn = self._step_modal if self.slo is not None else self._step
+        cache_size = getattr(fn, "_cache_size", None)
+        return cache_size() if callable(cache_size) else None
+
+    def describe_adaptation(self) -> str:
+        if self.mode_table is None:
+            return "adaptation off (no slo)"
+        s = self.metrics.summary()
+        occ = " ".join(f"{m}:{f:.2f}" for m, f in s["mode_occupancy"].items())
+        timeline = " -> ".join(
+            f"@{step}:{label}" for step, label in self.metrics.mode_timeline)
+        return (
+            f"slo max_err={self.slo.max_err:g}"
+            + (f" target_ms={self.slo.target_ms:g}" if self.slo.target_ms else "")
+            + f" | table {self.mode_table.describe()} | "
+            f"{s['mode_switches']} switches ({self.controller.up_shifts} up / "
+            f"{self.controller.down_shifts} down) | occupancy {occ} | "
+            f"timeline {timeline}"
+        )
 
     def generate_batch(self, requests: list[Request]) -> dict[int, list[int]]:
         """Offline batch API on top of the streaming engine: submit

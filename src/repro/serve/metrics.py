@@ -37,6 +37,12 @@ class ServeMetrics:
         self.prefills = 0
         self.decode_steps = 0
         self.active_slot_steps = 0  # sum over decode steps of active slots
+        # runtime-adaptation observability (repro.adapt): how many decode
+        # steps ran under each mode label, every mode switch, every probe
+        self.mode_steps: dict[str, int] = {}
+        self.mode_switches = 0
+        self.mode_timeline: list[tuple[int, str]] = []  # (decode_step, label)
+        self.probe_errs: list[tuple[int, float]] = []  # (decode_step, err)
         self._t_first_event: float | None = None
         self._t_last_event: float | None = None
         snap = plan_cache_stats()
@@ -62,10 +68,23 @@ class ServeMetrics:
         self.tokens_out += 1
         self.requests[rid].n_tokens += 1
 
-    def on_decode_step(self, n_active: int) -> None:
+    def on_decode_step(self, n_active: int, mode: str | None = None) -> None:
         self.decode_steps += 1
         self.active_slot_steps += n_active
+        if mode is not None:
+            self.mode_steps[mode] = self.mode_steps.get(mode, 0) + 1
+            if not self.mode_timeline or self.mode_timeline[-1][1] != mode:
+                self.mode_timeline.append((self.decode_steps, mode))
         self._mark()
+
+    def on_mode_switch(self) -> None:
+        """One applied mode-table change (repro.adapt controller decision).
+        The timeline itself is recorded by ``on_decode_step`` — this only
+        counts reconfigurations."""
+        self.mode_switches += 1
+
+    def on_probe(self, err: float) -> None:
+        self.probe_errs.append((self.decode_steps, float(err)))
 
     def on_done(self, rid: int) -> None:
         self.requests[rid].done = self._mark()
@@ -85,6 +104,16 @@ class ServeMetrics:
         if not self.decode_steps:
             return 0.0
         return self.active_slot_steps / (self.decode_steps * self.slots)
+
+    @property
+    def mode_occupancy(self) -> dict[str, float]:
+        """Fraction of decode steps spent under each mode label — the
+        serving-level view of how often the reconfigurable multiplier
+        actually ran in each configuration."""
+        total = sum(self.mode_steps.values())
+        if not total:
+            return {}
+        return {m: n / total for m, n in sorted(self.mode_steps.items())}
 
     def plan_cache_delta(self) -> dict:
         snap = plan_cache_stats()
@@ -111,6 +140,13 @@ class ServeMetrics:
             "latency_mean_s": sum(lats) / len(lats) if lats else None,
             "decode_steps": self.decode_steps,
             "occupancy": self.occupancy,
+            "mode_switches": self.mode_switches,
+            "mode_occupancy": self.mode_occupancy,
+            "probe_err_max": (max(e for _, e in self.probe_errs)
+                              if self.probe_errs else None),
+            "probe_err_mean": (sum(e for _, e in self.probe_errs)
+                               / len(self.probe_errs)
+                               if self.probe_errs else None),
             "plan_cache": self.plan_cache_delta(),
         }
 
@@ -119,9 +155,16 @@ class ServeMetrics:
         ttft = f"{s['ttft_mean_s']*1e3:.1f}ms" if s["ttft_mean_s"] is not None else "-"
         lat = f"{s['latency_mean_s']*1e3:.1f}ms" if s["latency_mean_s"] is not None else "-"
         pc = s["plan_cache"]
-        return (
+        out = (
             f"{s['tokens_out']} tokens from {s['completed']}/{s['requests']} "
             f"requests | {s['tok_s']:.1f} tok/s | ttft {ttft} | latency {lat} "
             f"| occupancy {s['occupancy']:.2f} over {s['decode_steps']} steps "
             f"| plan cache +{pc['misses']} plans / {pc['hits']} hits"
         )
+        if s["mode_occupancy"]:
+            occ = " ".join(f"{m}:{f:.2f}" for m, f in s["mode_occupancy"].items())
+            out += f" | modes {occ} ({s['mode_switches']} switches)"
+        if s["probe_err_max"] is not None:
+            out += (f" | probe err mean {s['probe_err_mean']:.2e} "
+                    f"max {s['probe_err_max']:.2e}")
+        return out

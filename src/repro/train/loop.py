@@ -63,8 +63,17 @@ def train_loop(
     start_step: int = 0,
     put_batch: Callable | None = None,
     on_metrics: Callable | None = None,
+    adapt=None,
 ) -> tuple[Any, list[dict]]:
-    """Generic loop; ``data`` provides ``next_batch()`` or is an iterator."""
+    """Generic loop; ``data`` provides ``next_batch()`` or is an iterator.
+
+    ``adapt`` (repro.adapt.TrainPrecisionSchedule) turns on the grad-norm-
+    drift precision schedule: the step is then called as
+    ``train_step(state, batch, mode_scalars)`` — a *modal* step whose GEMM
+    call-sites read the scalars through ``bind_modes`` (one executable, the
+    scalars select the live ``lax.switch`` branches) — and the schedule
+    observes each step's metrics to shift the mode table between steps.
+    """
     monitor = StragglerMonitor(alpha=loop_cfg.ewma_alpha, z_threshold=loop_cfg.straggler_z)
     history: list[dict] = []
     step = start_step
@@ -77,7 +86,10 @@ def train_loop(
         if put_batch is not None:
             batch = put_batch(batch)
         t0 = time.perf_counter()
-        state, metrics = train_step(state, batch)
+        if adapt is not None:
+            state, metrics = train_step(state, batch, adapt.mode_scalars())
+        else:
+            state, metrics = train_step(state, batch)
         jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
         step += 1
@@ -88,6 +100,10 @@ def train_loop(
             "straggler": straggle,
             **{k: float(v) for k, v in metrics.items()},
         }
+        if adapt is not None:
+            shift = adapt.observe(step, rec, dt)
+            rec["mode"] = adapt.table.label()
+            rec["mode_shift"] = shift
         history.append(rec)
         if on_metrics is not None and step % loop_cfg.log_every == 0:
             on_metrics(rec)

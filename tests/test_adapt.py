@@ -1,0 +1,345 @@
+"""repro.adapt: runtime mode table + binding, probes, hysteresis controller,
+and the end-to-end closed loop (ISSUE 4 acceptance: an ill-conditioned
+prompt batch shifts the decode mode up within the cooldown window and back
+down after, with zero recompiles)."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.adapt import (
+    SLO,
+    GradDriftProbe,
+    HysteresisController,
+    ModeTable,
+    TrainPrecisionSchedule,
+    bind_modes,
+    logit_residual,
+    runtime_mode_for,
+    sampled_matmul_residual,
+)
+from repro.adapt.workload import conditioned_model
+from repro.core.precision import Mode
+from repro.core.rmpm import mp_einsum, mp_matmul, mp_matmul_runtime
+from repro.serve import ServeEngine
+
+
+class TestModeTable:
+    def test_clamps_to_ladder(self):
+        t = ModeTable({"mlp_up": Mode.M8})
+        assert t.shift("mlp_up", -1) is False  # already at min
+        assert t.shift("mlp_up", +5) is True
+        assert t.modes()["mlp_up"] == Mode.M24  # clamped at max
+        assert t.at_max
+
+    def test_shift_all_preserves_stagger(self):
+        t = ModeTable({"mlp_up": Mode.M8, "attn_qk": Mode.M16})
+        assert t.shift_all(+1)
+        assert t.modes() == {"mlp_up": Mode.M16, "attn_qk": Mode.M24}
+        # attn_qk clamps at max; mlp_up keeps climbing
+        assert t.shift_all(+1)
+        assert t.modes() == {"mlp_up": Mode.M24, "attn_qk": Mode.M24}
+        assert t.switches == 2 and len(t.history) == 2
+
+    def test_scalars_shifted_clamped(self):
+        t = ModeTable({"a": Mode.M16})
+        assert int(t.scalars()["a"]) == int(Mode.M16)
+        assert int(t.scalars_shifted(+2)["a"]) == int(Mode.M24)
+        assert int(t.scalars_shifted(-5)["a"]) == int(Mode.M8)
+
+    def test_rejects_non_f32_ladder(self):
+        with pytest.raises(ValueError):
+            ModeTable({"a": Mode.M8}, max_mode=Mode.M48)
+        with pytest.raises(ValueError):
+            ModeTable({})
+
+    def test_label(self):
+        assert ModeTable({"a": Mode.M8, "b": Mode.M8}).label() == "M8"
+        assert ModeTable({"a": Mode.M8, "b": Mode.M16}).label() == "M16/M8"
+
+    def test_from_plans_skips_unswitchable(self):
+        from repro.plan import plan_matmul
+
+        p8 = plan_matmul((64, 64), (64, 64), accuracy=2**-4, backend="cpu")
+        pdd = plan_matmul((64, 64), (64, 64), dtype="df32", backend="cpu")
+        t = ModeTable.from_plans({"mlp_up": p8, "exotic": pdd})
+        assert set(t.modes()) == {"mlp_up"}
+
+
+class TestBinding:
+    def test_unbound_returns_none(self):
+        assert runtime_mode_for("mlp_up") is None
+
+    def test_bound_with_default(self):
+        with bind_modes({"mlp_up": 1, "*": 3}):
+            assert runtime_mode_for("mlp_up") == 1
+            assert runtime_mode_for("logits") == 3
+        assert runtime_mode_for("mlp_up") is None
+
+    def test_runtime_switch_matches_static(self, rng):
+        """The lax.switch branch selected by a runtime scalar must compute
+        exactly what the static-mode dispatch computes."""
+        a = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+        for mode in (Mode.M8, Mode.M16, Mode.M24):
+            static = mp_matmul(a, b, mode)
+            runtime = mp_matmul_runtime(a, b, jnp.int32(int(mode)))
+            np.testing.assert_array_equal(np.asarray(static), np.asarray(runtime))
+
+    def test_pmm_reads_bound_scalar(self, rng):
+        """pmm under bind_modes switches with the scalar, without retracing."""
+        from repro.core.policy import PrecisionPolicy
+        from repro.models.layers import pmm
+
+        x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+        policy = PrecisionPolicy(default=Mode.M8)
+        traces = []
+
+        @jax.jit
+        def f(x, w, scalar):
+            traces.append(1)
+            with bind_modes({"mlp_up": scalar}):
+                return pmm(x, w, "mlp_up", policy)
+
+        out8 = f(x, w, jnp.int32(int(Mode.M8)))
+        out24 = f(x, w, jnp.int32(int(Mode.M24)))
+        np.testing.assert_array_equal(np.asarray(out8),
+                                      np.asarray(mp_matmul(x, w, Mode.M8)))
+        np.testing.assert_array_equal(np.asarray(out24),
+                                      np.asarray(mp_matmul(x, w, Mode.M24)))
+        assert len(traces) == 1  # one trace, two mode values
+
+
+class TestBlockPlumb:
+    """Satellite: the Pallas block override survives the runtime mode switch
+    (and mp_einsum's pallas matmul dispatch)."""
+
+    def _spy(self, monkeypatch):
+        calls = []
+        from repro.kernels.limb_matmul import ops as limb_ops
+
+        real = limb_ops.limb_matmul
+
+        def spy(a, b, k, **kw):
+            calls.append(kw)
+            return real(a, b, k, **kw)  # interpret=True default: CPU-exec
+        monkeypatch.setattr(limb_ops, "limb_matmul", spy)
+        return calls
+
+    def test_runtime_matmul_forwards_block(self, rng, monkeypatch):
+        calls = self._spy(monkeypatch)
+        a = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        mp_matmul_runtime(a, b, jnp.int32(int(Mode.M8)), impl="pallas",
+                          block=(8, 8, 8))
+        assert calls and all(
+            (c.get("bm"), c.get("bn"), c.get("bk")) == (8, 8, 8) for c in calls)
+
+    def test_einsum_matmul_forwards_block(self, rng, monkeypatch):
+        calls = self._spy(monkeypatch)
+        a = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        mp_einsum("mk,kn->mn", a, b, Mode.M16, impl="pallas", block=(8, 8, 8))
+        assert calls and calls[0].get("bm") == 8
+
+    def test_einsum_runtime_forwards_impl_and_block(self, rng, monkeypatch):
+        from repro.core.rmpm import mp_einsum_runtime
+
+        calls = self._spy(monkeypatch)
+        a = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+        mp_einsum_runtime("mk,kn->mn", a, b, jnp.int32(int(Mode.M8)),
+                          impl="pallas", block=(8, 8, 8))
+        assert calls and all(c.get("bm") == 8 for c in calls)
+        # native would make every switch branch identical — rejected
+        with pytest.raises(ValueError):
+            mp_einsum_runtime("mk,kn->mn", a, b, jnp.int32(1), impl="native")
+
+
+class TestController:
+    def test_upshift_on_violation(self):
+        c = HysteresisController(SLO(max_err=0.1), cooldown=0)
+        assert c.observe(1, err=0.5, err_down=0.5) == +1
+
+    def test_dead_band_holds(self):
+        c = HysteresisController(SLO(max_err=0.1, down_factor=0.25), cooldown=0)
+        # err below SLO but the would-be one-down error is inside the band
+        assert c.observe(1, err=0.01, err_down=0.05) == 0
+
+    def test_downshift_only_when_down_is_safe(self):
+        c = HysteresisController(SLO(max_err=0.1, down_factor=0.25), cooldown=0)
+        assert c.observe(1, err=0.001, err_down=0.01) == -1
+
+    def test_cooldown_blocks_consecutive_shifts(self):
+        c = HysteresisController(SLO(max_err=0.1), cooldown=2)
+        assert c.observe(1, err=0.5) == +1
+        assert c.observe(2, err=0.5) == 0  # cooling down
+        assert c.observe(3, err=0.5) == 0
+        assert c.observe(4, err=0.5) == +1
+
+    def test_latency_pressure_relaxes_down_threshold(self):
+        slo = SLO(max_err=0.1, target_ms=10.0, down_factor=0.25)
+        c = HysteresisController(slo, cooldown=0)
+        # err_down in the dead band: held without latency pressure...
+        assert c.observe(1, err=0.05, err_down=0.05, step_ms=5.0) == 0
+        # ...but shifted down when the step overshoots the latency target
+        assert c.observe(2, err=0.05, err_down=0.05, step_ms=50.0) == -1
+        # and never past the accuracy SLO itself
+        assert c.observe(3, err=0.2, err_down=0.2, step_ms=50.0) == +1
+
+    def test_clamped_table_suppresses_decision(self):
+        c = HysteresisController(SLO(max_err=0.1), cooldown=0)
+        assert c.observe(1, err=0.5, can_up=False) == 0
+        assert c.observe(2, err=0.001, err_down=0.001, can_down=False) == 0
+
+    def test_slo_validation(self):
+        with pytest.raises(ValueError):
+            SLO(max_err=0.0)
+        with pytest.raises(ValueError):
+            SLO(max_err=0.1, down_factor=1.5)
+
+
+class TestProbes:
+    def test_logit_residual_masks_inactive(self):
+        ref = jnp.ones((2, 4))
+        lo = ref.at[0, 0].add(100.0)
+        active = jnp.asarray([False, True])
+        assert float(logit_residual(lo, ref, active)) == 0.0
+        assert float(logit_residual(lo, ref)) > 0.0
+
+    def test_sampled_matmul_residual_orders_modes(self, rng):
+        x = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+        r8 = float(sampled_matmul_residual(x, w, Mode.M8))
+        r16 = float(sampled_matmul_residual(x, w, Mode.M16))
+        r24 = float(sampled_matmul_residual(x, w, Mode.M24))
+        assert r8 > r16 > r24 == 0.0  # M24 has no mode above to shadow with
+
+    def test_grad_drift_warmup_and_spike(self):
+        p = GradDriftProbe(warmup=2)
+        assert p.update(1.0) == 0.0
+        assert p.update(1.0) == 0.0
+        assert p.update(1.0) < 0.01
+        assert p.update(10.0) > 1.0  # spike
+
+
+class TestTrainSchedule:
+    def test_clamped_floor_does_not_eat_cooldown(self):
+        """Idle probes at the ladder floor must not register phantom down
+        decisions — a drift spike arriving right after them has to up-shift
+        immediately, not wait out a cooldown the clamp consumed."""
+        table = ModeTable({"mlp_up": Mode.M8})
+        sched = TrainPrecisionSchedule(
+            table, SLO(max_err=0.5),
+            controller=HysteresisController(SLO(max_err=0.5), cooldown=2),
+            probe=GradDriftProbe(warmup=1),
+        )
+        for step in range(1, 6):
+            assert sched.observe(step, {"grad_norm": 2.0}) == 0
+        assert sched.observe(6, {"grad_norm": 50.0}) == +1
+        assert table.modes()["mlp_up"] == Mode.M16
+
+    def test_relaxes_down_then_recovers_up(self):
+        table = ModeTable({"mlp_up": Mode.M24, "logits": Mode.M24})
+        sched = TrainPrecisionSchedule(
+            table, SLO(max_err=0.5),
+            controller=HysteresisController(SLO(max_err=0.5), cooldown=0),
+            probe=GradDriftProbe(warmup=1),
+        )
+        for step in range(1, 5):
+            sched.observe(step, {"grad_norm": 2.0})
+        assert table.modes()["mlp_up"] == Mode.M8  # stable -> relaxed down
+        sched.observe(5, {"grad_norm": 40.0})  # drift spike
+        assert table.modes()["mlp_up"] == Mode.M16
+        assert table.switches >= 3
+
+
+def _submit(eng, reqs, base):
+    for r in reqs:
+        eng.submit(dataclasses.replace(r, rid=r.rid + base))
+
+
+@pytest.mark.slow
+class TestClosedLoop:
+    """ISSUE 4 acceptance: the conditioned workload drives the full loop."""
+
+    def test_hot_batch_shifts_up_then_back_down(self):
+        wl = conditioned_model()
+        rng = np.random.default_rng(0)
+        eng = ServeEngine(wl.model, wl.params, batch_slots=4, max_len=48,
+                          slo=SLO(max_err=0.5), adapt_every=1)
+        assert eng.mode_table.label() == "M8"  # policy pick = initial condition
+
+        # phase 1: tame traffic holds the cheap mode
+        _submit(eng, wl.requests(4, hot=set(), rng=rng, max_new=8), 0)
+        eng.drain()
+        assert eng.mode_table.label() == "M8"
+        up_before = eng.controller.up_shifts
+
+        # phase 2: ill-conditioned batch -> up within the cooldown window
+        _submit(eng, wl.requests(4, hot={0, 1, 2}, rng=rng, max_new=12), 100)
+        steps_at_join = eng.metrics.decode_steps
+        while eng.scheduler.has_work():
+            eng.step()
+            if eng.controller.up_shifts > up_before:
+                break
+        window = eng.metrics.decode_steps - steps_at_join
+        assert eng.controller.up_shifts == up_before + 1
+        assert window <= eng.controller.cooldown + 2 * eng.adapt_every
+        assert int(Mode[eng.mode_table.label()]) > int(Mode.M8)
+        eng.drain()
+
+        # phase 3: tame traffic again -> back down to the cheap mode
+        _submit(eng, wl.requests(4, hot=set(), rng=rng, max_new=8), 200)
+        eng.drain()
+        assert eng.mode_table.label() == "M8"
+        assert eng.controller.down_shifts >= 1
+        assert eng.metrics.mode_switches >= 2
+
+        # mode timeline recorded the excursion (M8 -> up -> ... -> M8)
+        labels = [lab for _, lab in eng.metrics.mode_timeline]
+        assert labels[0] == "M8" and labels[-1] == "M8" and len(labels) >= 3
+
+        # zero recompiles: one compiled decode step across all mode values
+        if eng.decode_compile_count is not None:
+            assert eng.decode_compile_count == 1
+
+    def test_monitor_mode_never_shifts(self):
+        wl = conditioned_model()
+        rng = np.random.default_rng(1)
+        eng = ServeEngine(wl.model, wl.params, batch_slots=2, max_len=48,
+                          slo=SLO(max_err=0.5), adapt_every=1, adapt=False)
+        _submit(eng, wl.requests(2, hot={0, 1}, rng=rng, max_new=8), 0)
+        eng.drain()
+        assert eng.mode_table.label() == "M8"
+        assert eng.metrics.mode_switches == 0
+        # the probe still saw the violation the controller would act on
+        assert max(e for _, e in eng.metrics.probe_errs) > 0.5
+
+    def test_per_mode_occupancy_and_probe_stats_in_summary(self):
+        wl = conditioned_model()
+        rng = np.random.default_rng(2)
+        eng = ServeEngine(wl.model, wl.params, batch_slots=2, max_len=48,
+                          slo=SLO(max_err=0.5), adapt_every=2)
+        _submit(eng, wl.requests(2, hot={0}, rng=rng, max_new=10), 0)
+        eng.drain()
+        s = eng.metrics.summary()
+        assert abs(sum(s["mode_occupancy"].values()) - 1.0) < 1e-6
+        assert s["probe_err_max"] >= s["probe_err_mean"] > 0.0
+        assert "modes" in eng.metrics.format_summary()
+
+    def test_static_engine_reports_static_mode_occupancy(self):
+        """Satellite: non-adaptive engines surface their (single) decode
+        mode in the per-mode occupancy, so serve_sweep rows always carry
+        the column."""
+        wl = conditioned_model()
+        rng = np.random.default_rng(3)
+        eng = ServeEngine(wl.model, wl.params, batch_slots=2, max_len=48)
+        _submit(eng, wl.requests(2, hot=set(), rng=rng, max_new=6), 0)
+        eng.drain()
+        s = eng.metrics.summary()
+        assert s["mode_occupancy"] == {"M8": 1.0}
+        assert s["mode_switches"] == 0

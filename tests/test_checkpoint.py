@@ -1,0 +1,124 @@
+"""checkpoint/manager.py: save/restore round-trips, retention, and
+restoring under a different RMPM mode (the mode bits are not part of the
+checkpoint — precision is a property of the execution, not of the saved
+numbers)."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager, _flatten, _unflatten
+from repro.configs import get_smoke_config
+from repro.core.policy import NATIVE_F32, PrecisionPolicy
+from repro.core.precision import Mode
+from repro.models import build_model
+from repro.train.loop import resume_or_init
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+def _tiny(policy=NATIVE_F32):
+    cfg = get_smoke_config("qwen1.5-0.5b").with_policy(policy)
+    cfg = dataclasses.replace(cfg, n_layers=1)
+    return cfg, build_model(cfg)
+
+
+def _batch(cfg, batch=2, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, (batch, seq + 1)).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+
+
+class TestFlatten:
+    def test_roundtrip_nested(self):
+        tree = {"a": {"b": np.arange(3)}, "c": (np.zeros(2), np.ones(1))}
+        flat = _flatten(tree)
+        back = _unflatten(flat)
+        assert set(flat) == {"a/b", "c/[0]", "c/[1]"}
+        np.testing.assert_array_equal(back["a"]["b"], np.arange(3))
+        assert isinstance(back["c"], tuple) and len(back["c"]) == 2
+
+
+class TestSaveRestore:
+    def test_train_state_roundtrip(self, tmp_path):
+        cfg, model = _tiny()
+        tcfg = TrainConfig()
+        state = init_train_state(model, jax.random.key(0), tcfg)
+        step_fn = jax.jit(make_train_step(model, tcfg))
+        state, _ = step_fn(state, _batch(cfg))
+
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(3, state)
+        assert mgr.latest_step() == 3
+        step, restored = mgr.restore()
+        assert step == 3
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+            state, restored,
+        )
+        # a restored state must be steppable (optimizer slots intact)
+        restored, metrics = step_fn(restored, _batch(cfg, seed=1))
+        assert np.isfinite(float(metrics["loss"]))
+
+    def test_async_save_waits_and_commits(self, tmp_path):
+        cfg, model = _tiny()
+        state = init_train_state(model, jax.random.key(0), TrainConfig())
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(1, state)
+        assert isinstance(mgr._thread, threading.Thread)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+        # atomic commit: no .tmp_ directories survive
+        assert not [p for p in tmp_path.iterdir() if p.name.startswith(".tmp_")]
+
+    def test_keep_k_gc(self, tmp_path):
+        cfg, model = _tiny()
+        state = init_train_state(model, jax.random.key(0), TrainConfig())
+        mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_restore_missing_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        with pytest.raises(FileNotFoundError):
+            mgr.restore()
+        assert mgr.latest_step() is None
+
+    def test_resume_or_init_prefers_checkpoint(self, tmp_path):
+        cfg, model = _tiny()
+        state = init_train_state(model, jax.random.key(0), TrainConfig())
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        start, out = resume_or_init(mgr, lambda: state)
+        assert start == 0
+        mgr.save(7, state)
+        start, out = resume_or_init(mgr, lambda: (_ for _ in ()).throw(
+            AssertionError("init_fn must not run when a checkpoint exists")))
+        assert start == 7
+
+
+class TestRestoreAcrossModes:
+    def test_restore_under_different_rmpm_mode(self, tmp_path):
+        """Save under the fast M8 policy, restore into an M24 model: the
+        parameters are mode-agnostic f32; only the step's arithmetic
+        changes.  This is the serving/training face of the paper's runtime
+        reconfiguration — checkpoints survive mode shifts."""
+        cfg8, model8 = _tiny(PrecisionPolicy(default=Mode.M8))
+        tcfg = TrainConfig()
+        state = init_train_state(model8, jax.random.key(0), tcfg)
+        step8 = jax.jit(make_train_step(model8, tcfg))
+        state, _ = step8(state, _batch(cfg8))
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, state)
+
+        cfg24, model24 = _tiny(PrecisionPolicy(default=Mode.M24))
+        step, restored = mgr.restore()
+        step24 = jax.jit(make_train_step(model24, tcfg))
+        restored, metrics = step24(restored, _batch(cfg24, seed=2))
+        assert np.isfinite(float(metrics["loss"]))
+        # and the other direction: the M24-trained state steps under M8
+        back, metrics8 = step8(jax.tree.map(jnp.asarray, restored),
+                               _batch(cfg8, seed=3))
+        assert np.isfinite(float(metrics8["loss"]))
