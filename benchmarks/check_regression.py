@@ -149,6 +149,57 @@ def adapt_semantics(doc: dict, *, check_throughput: bool = False) -> list[str]:
     return problems
 
 
+def spec_semantics(doc: dict) -> list[str]:
+    """Machine-independent invariants of a fresh BENCH_spec.json — the
+    self-speculative-decoding claim itself, not a wall-clock ratio:
+
+      * every cell's drain() was token-for-token identical to the baseline
+        engine (``exact_match``) — speculation must never change outputs;
+      * every cell measured an acceptance rate (the draft actually ran) and
+        at least one cell accepted drafts (acceptance > 0), so the measured
+        verify-step *dispatches* per emitted token — decode's sequential-
+        latency unit, 1.0/token for the baseline engine by construction —
+        drop below 1.0 somewhere (an inert draft sits exactly at 1.0);
+      * no cell's verify-steps-per-token exceeds 1.0 (the baseline cost);
+      * the compiled round count stayed 1 in every cell — draft shift, k
+        grid position and mode tables must never retrace.
+
+    Returns a list of violation strings (empty = pass).
+    """
+    problems = []
+    cells = doc.get("cells", [])
+    if not cells:
+        return ["no spec cells found"]
+    best_vspt = None
+    any_accept = False
+    for c in cells:
+        key = (f"k={c.get('k')} shift={c.get('draft_shift')} "
+               f"adapt={c.get('adaptive_shift')} acc={c.get('accuracy')}")
+        if not c.get("exact_match"):
+            problems.append(f"{key}: output diverged from the baseline engine")
+        acc = c.get("acceptance_rate")
+        vspt = c.get("verify_steps_per_token")
+        if acc is None or vspt is None:
+            problems.append(f"{key}: no acceptance/verify-steps measured")
+            continue
+        if acc > 0:
+            any_accept = True
+        if vspt > 1.0:
+            problems.append(
+                f"{key}: verify-steps/token {vspt} above the baseline cost")
+        best_vspt = vspt if best_vspt is None else min(best_vspt, vspt)
+        if c.get("spec_compile_count") not in (None, 1):
+            problems.append(
+                f"{key}: {c['spec_compile_count']} compiled round variants "
+                "(draft shift / mode changes must not retrace)")
+    if not any_accept:
+        problems.append("no cell accepted any draft: speculation is inert")
+    elif best_vspt is not None and best_vspt >= 1.0:
+        problems.append(
+            f"best verify-steps/token {best_vspt} never dropped below 1.0")
+    return problems
+
+
 def compare(
     baseline: dict[tuple, float],
     new: dict[tuple, float],
@@ -237,6 +288,13 @@ def main(argv: list[str] | None = None) -> int:
         "--adapt-baseline when one is given",
     )
     ap.add_argument(
+        "--spec-new",
+        default="",
+        help="fresh BENCH_spec.json; checked for the machine-independent "
+        "speculative-decoding invariants (exact output equivalence, "
+        "acceptance > 0 with verify-steps/token < 1, one compiled round)",
+    )
+    ap.add_argument(
         "--adapt-strict",
         action="store_true",
         help="also fail on the adapted-vs-safe throughput invariant "
@@ -295,6 +353,15 @@ def main(argv: list[str] | None = None) -> int:
                 adapt_cells(doc),
                 args,
             )
+    if args.spec_new:
+        ran = True
+        problems = spec_semantics(load(args.spec_new))
+        for p in problems:
+            print(f"spec (semantics): FAIL {p}")
+        if not problems:
+            print("spec (semantics): ok (outputs exact, drafts accepted with "
+                  "verify-steps/token < 1, one compiled round)")
+        ok &= not problems
     if not ran:
         print("nothing to compare: pass --plan-baseline/--plan-new and/or --serve-*")
         return 2

@@ -25,6 +25,7 @@ BENCH_PLAN = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
 BENCH_TUNE = os.path.join(os.path.dirname(__file__), "..", "BENCH_tune.json")
 BENCH_SERVE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 BENCH_ADAPT = os.path.join(os.path.dirname(__file__), "..", "BENCH_adapt.json")
+BENCH_SPEC = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
 EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
 BEGIN_MARK = "<!-- BEGIN GENERATED (benchmarks/make_experiments_md.py) -->"
 END_MARK = "<!-- END GENERATED -->"
@@ -303,6 +304,51 @@ def adapt_section() -> list[str]:
     ]
 
 
+def load_bench_spec(path: str = BENCH_SPEC) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def spec_table(doc: dict) -> list[str]:
+    out = ["| k | draft shift | accuracy | exact | acceptance | verify-steps/token | spec tok/s | baseline tok/s | shift moves |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in doc.get("cells", []):
+        acc = f"{r['accuracy']:.1e}" if r["accuracy"] else "unplanned"
+        shift = (f"adaptive ({r['final_draft_shift']})"
+                 if r.get("adaptive_shift") else str(r["draft_shift"]))
+        rate = (f"{r['acceptance_rate']:.2f}"
+                if r.get("acceptance_rate") is not None else "-")
+        vspt = (f"{r['verify_steps_per_token']:.2f}"
+                if r.get("verify_steps_per_token") is not None else "-")
+        out.append(
+            f"| {r['k']} | {shift} | {acc} "
+            f"| {'yes' if r['exact_match'] else '**no**'} | {rate} | {vspt} "
+            f"| {r['tok_s']:.1f} | {r['baseline_tok_s']:.1f} "
+            f"| {r.get('draft_shift_moves', 0)} |"
+        )
+    return out
+
+
+def spec_section() -> list[str]:
+    doc = load_bench_spec()
+    if doc is None:
+        return ["### Spec sweep\n",
+                "_BENCH_spec.json not found — run "
+                "`python -m benchmarks.spec_sweep` first._\n"]
+    return [
+        f"### Spec sweep (BENCH_spec.json, host={doc['host_backend']}, "
+        f"arch={doc['arch']}, {doc['requests']} ragged requests)\n",
+        "Self-speculative decoding (`repro.spec`): the cheap mode of the "
+        "same compiled step drafts k tokens, the exact baseline step "
+        "verifies — outputs stay token-identical while expensive-mode "
+        "verify steps per emitted token drop below 1:\n",
+        "\n".join(spec_table(doc)),
+        "",
+    ]
+
+
 def generated_sections() -> str:
     parts: list[str] = []
     doc = load_bench_plan()
@@ -327,6 +373,7 @@ def generated_sections() -> str:
     parts.extend(tune_section())
     parts.extend(serve_section())
     parts.extend(adapt_section())
+    parts.extend(spec_section())
     recs = load("paper_baseline")
     if recs:
         n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
@@ -400,6 +447,7 @@ def main() -> None:
     print("\n".join(tune_section()) + "\n")
     print("\n".join(serve_section()) + "\n")
     print("\n".join(adapt_section()) + "\n")
+    print("\n".join(spec_section()) + "\n")
     recs = load(policy)
     n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
     n_na = sum(1 for r in recs.values() if r["status"] == "n/a")

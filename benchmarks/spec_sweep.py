@@ -1,0 +1,187 @@
+"""Speculative-decoding sweep: k x draft-shift x accuracy vs the baseline
+engine (EXPERIMENTS.md Cell I is generated from this output).
+
+For every (k, draft_shift, accuracy) cell the same ragged workload runs
+through the PR-2 baseline engine and the speculative engine
+(``ServeEngine(speculate=SpecConfig(...))``) over the same params, and the
+cell records
+
+  * **exact_match** — drain() token-for-token equality (the speculative
+    engine's defining invariant: the verify chain replays the exact
+    baseline step, so acceptance only changes the cost, never the output);
+  * **acceptance rate** and **verify-steps-per-token** — expensive-mode
+    verify executions per emitted token, the machine-independent payoff
+    (< 1.0 whenever anything is accepted; the baseline is 1.0 by
+    construction);
+  * **tok/s** both ways (CPU wall clock: machine-local, trend-only);
+  * **spec_compile_count** — compiled round variants (must stay 1: draft
+    shift and mode tables ride in as jit scalars).
+
+One extra row per accuracy runs the acceptance *controller* live
+(``adapt=True``) and records its draft-shift moves.
+
+    PYTHONPATH=src python -m benchmarks.spec_sweep            # full sweep
+    PYTHONPATH=src python -m benchmarks.spec_sweep --quick    # CI-sized
+
+Emits ``BENCH_spec.json``; gated machine-independently by
+``benchmarks.check_regression --spec-new``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.serve import ServeEngine, ragged_requests
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Scheduler
+from repro.spec import SpecConfig
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
+
+ACCURACIES = (None, 2.0**-12)  # None = unplanned native_f32 policy table
+KS = (2, 4)
+SHIFTS = (1, 2)
+
+
+def build_tiny(arch: str):
+    from benchmarks.serve_sweep import build_tiny as _bt
+
+    return _bt(arch)
+
+
+def _reset(eng: ServeEngine) -> None:
+    """Fresh metrics/scheduler — and, for adaptive cells, a fresh
+    acceptance controller back at the configured initial shift — between
+    the warmup and the measured run, so the recorded draft-shift moves are
+    the measured workload's own.  Compiled executables (step, prefill,
+    spec round) are kept, which is the point of the warmup."""
+    from repro.spec import AcceptanceController
+
+    eng.metrics = ServeMetrics(eng.slots)
+    eng.scheduler = Scheduler(eng.slots, eng.max_len)
+    if eng.spec is not None:
+        eng._spec_window = [0, 0]
+        if eng._accept_ctrl is not None:
+            eng._accept_ctrl = AcceptanceController(
+                eng.spec, eng._accept_ctrl.ladder)
+
+
+def _run(eng: ServeEngine, reqs) -> tuple[dict, dict, float]:
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    outs = eng.drain()
+    wall = time.perf_counter() - t0
+    return outs, eng.metrics.summary(), wall
+
+
+def _warmup(eng: ServeEngine, reqs) -> None:
+    _run(eng, [dataclasses.replace(reqs[0], rid=10_000)])
+    _reset(eng)
+
+
+def sweep_cell(model, params, baseline_out, base_s, *, slots, max_len,
+               accuracy, k, shift, adapt, reqs) -> dict:
+    eng = ServeEngine(
+        model, params, batch_slots=slots, max_len=max_len,
+        accuracy=accuracy, tune_table=False,
+        speculate=SpecConfig(k=k, draft_shift=shift, adapt=adapt),
+    )
+    _warmup(eng, reqs)
+    outs, s, wall = _run(eng, reqs)
+    return {
+        "k": k,
+        "draft_shift": shift,
+        "adaptive_shift": adapt,
+        "accuracy": accuracy,
+        "requests": len(reqs),
+        "exact_match": outs == baseline_out,
+        "tokens_out": s["tokens_out"],
+        "tok_s": round(s["tok_s"], 2),
+        "baseline_tok_s": round(base_s["tok_s"], 2),
+        "wall_s": round(wall, 3),
+        "acceptance_rate": (round(s["acceptance_rate"], 4)
+                            if s["acceptance_rate"] is not None else None),
+        "verify_steps_per_token": (round(s["verify_steps_per_token"], 4)
+                                   if s["verify_steps_per_token"] is not None
+                                   else None),
+        "spec_rounds": s["spec_rounds"],
+        "spec_rejected": s["spec_rejected"],
+        "draft_shift_moves": s["draft_shift_moves"],
+        "final_draft_shift": eng.draft_shift,
+        "spec_compile_count": eng.spec_compile_count,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: one accuracy, shift=1 grid plus the "
+                         "adaptive row (cells stay key-comparable to the "
+                         "committed full-sweep baseline)")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    cfg, model, params = build_tiny(args.arch)
+    max_len = args.prompt_len + args.max_new + 8
+    rng = np.random.default_rng(0)
+    reqs = ragged_requests(args.requests, cfg.vocab, args.prompt_len,
+                           args.max_new, rng)
+    accuracies = (None,) if args.quick else ACCURACIES
+    grid = [(k, s) for k in KS for s in (SHIFTS[:1] if args.quick else SHIFTS)]
+
+    cells = []
+    for accuracy in accuracies:
+        base = ServeEngine(model, params, batch_slots=args.slots,
+                           max_len=max_len, accuracy=accuracy,
+                           tune_table=False)
+        _warmup(base, reqs)
+        baseline_out, base_s, _ = _run(base, reqs)
+        acc_s = "unplanned" if accuracy is None else f"{accuracy:.1e}"
+        for k, shift in grid:
+            cell = sweep_cell(
+                model, params, baseline_out, base_s, slots=args.slots,
+                max_len=max_len, accuracy=accuracy, k=k, shift=shift,
+                adapt=False, reqs=reqs)
+            cells.append(cell)
+            print(f"k={k} shift={shift} acc={acc_s}: "
+                  f"exact={cell['exact_match']} "
+                  f"acceptance={cell['acceptance_rate']} "
+                  f"verify/token={cell['verify_steps_per_token']} "
+                  f"{cell['tok_s']} vs base {cell['baseline_tok_s']} tok/s")
+        # the live acceptance controller (draft_shift is its initial rung)
+        cell = sweep_cell(
+            model, params, baseline_out, base_s, slots=args.slots,
+            max_len=max_len, accuracy=accuracy, k=KS[-1], shift=1,
+            adapt=True, reqs=reqs)
+        cells.append(cell)
+        print(f"k={KS[-1]} adaptive: exact={cell['exact_match']} "
+              f"final_shift={cell['final_draft_shift']} "
+              f"({cell['draft_shift_moves']} moves)")
+    doc = {
+        "host_backend": jax.default_backend(),
+        "arch": args.arch,
+        "slots": args.slots,
+        "requests": args.requests,
+        "prompt_len": args.prompt_len,
+        "max_new": args.max_new,
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -70,6 +70,11 @@ def quantize_mantissa(x: jax.Array, keep_bits: int, rounding: str = "grte") -> j
     """
     if rounding not in _ROUNDINGS:
         raise ValueError(f"rounding must be one of {_ROUNDINGS}, got {rounding!r}")
+    if keep_bits < 1:
+        # keep_bits <= 0 would make drop > mant_bits: the kept-mask and the
+        # rounding carry then reach into the exponent and sign fields and
+        # the "quantized" value is garbage, not a coarser float
+        raise ValueError(f"keep_bits must be >= 1, got {keep_bits}")
     if x.dtype == jnp.float32:
         xi = jax.lax.bitcast_convert_type(x, jnp.int32)
         qi = _quantize_bits(xi, 23, min(keep_bits, 23), rounding, jnp.int32, jnp.uint32)

@@ -22,7 +22,11 @@ def quantize_mantissa_op(
     interpret: bool = True,
 ) -> jax.Array:
     """Quantize the mantissa of an arbitrary-shape f32 array to ``keep``
-    explicit bits with the selected rounding (trunc | rne | grte)."""
+    explicit bits with the selected rounding (trunc | rne | grte).
+    ``keep`` must be >= 1 (the kernel rejects values that would reach into
+    the exponent/sign fields, matching the jnp oracle)."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
     if keep >= 23:
         return x
     shape = x.shape

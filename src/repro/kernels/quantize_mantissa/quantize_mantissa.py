@@ -62,6 +62,10 @@ def quantize_mantissa_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """x: (M, N) f32, M/N multiples of block dims (ops.py pads)."""
+    if keep < 1:
+        # mirror the jnp oracle: keep <= 0 makes drop > 23 and the integer
+        # mask/carry corrupt the exponent and sign fields
+        raise ValueError(f"keep must be >= 1, got {keep}")
     if keep >= _MANT:
         return x
     m, n = x.shape

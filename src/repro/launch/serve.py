@@ -16,6 +16,11 @@ loop at run time: the decode phase's planned modes become a mutable mode
 table that repro.adapt's probe + hysteresis controller retunes against the
 SLO between steps — one compiled step, the mode scalars select the live
 ``lax.switch`` branches (zero recompiles).
+
+Pass ``--speculate`` (with ``--draft-k``, ``--draft-shift``) for
+self-speculative decoding (repro.spec): the cheap mode of the same step
+drafts, the exact baseline step verifies — outputs stay token-identical
+while expensive-mode steps per token drop below 1.
 """
 from __future__ import annotations
 
@@ -90,6 +95,18 @@ def main() -> None:
                          "within the error SLO")
     ap.add_argument("--adapt-every", type=int, default=4,
                     help="probe cadence in decode steps")
+    ap.add_argument("--speculate", action="store_true",
+                    help="self-speculative decoding (repro.spec): draft "
+                         "--draft-k tokens per slot under a cheap mode "
+                         "table, verify with the exact baseline step — "
+                         "bit-identical outputs, <1 expensive-mode step per "
+                         "token")
+    ap.add_argument("--draft-k", type=int, default=3,
+                    help="draft depth per speculative round")
+    ap.add_argument("--draft-shift", type=int, default=2,
+                    help="initial rungs below the verify modes for the "
+                         "draft table (the acceptance controller retunes "
+                         "it at run time)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -114,12 +131,18 @@ def main() -> None:
         from repro.adapt import SLO
 
         slo = SLO(max_err=args.slo_err, target_ms=args.slo_ms or None)
+    speculate = None
+    if args.speculate:
+        from repro.spec import SpecConfig
+
+        speculate = SpecConfig(k=args.draft_k, draft_shift=args.draft_shift)
     eng = ServeEngine(
         model, params, batch_slots=slots, max_len=max_len,
         accuracy=args.accuracy,
         prefill_tokens=max(args.prompt_len // 2, 1),
         tune_table=args.tune_table or None,
         slo=slo, adapt_every=args.adapt_every,
+        speculate=speculate,
     )
     t0 = time.perf_counter()
     outs = run_open_loop(eng, reqs, args.arrival_rate, rng)
@@ -130,6 +153,9 @@ def main() -> None:
     if args.adapt:
         print(f"adaptation: {eng.describe_adaptation()}")
         print(f"compiled decode-step variants: {eng.decode_compile_count}")
+    if args.speculate:
+        print(f"speculation: {eng.describe_speculation()}")
+        print(f"compiled spec-round variants: {eng.spec_compile_count}")
     stats = plan_cache_stats()
     print(f"plan cache: {stats.entries} entries, "
           f"{stats.hits} hits / {stats.misses} misses (process-wide)")

@@ -2,10 +2,13 @@
 
     scheduler.py  admission queue + slot lifecycle (WAITING/PREFILL/DECODE/DONE)
     engine.py     masked compiled step over the fixed slot array + streaming API
-    metrics.py    tok/s, TTFT, latency, slot occupancy, plan-cache hits
+    metrics.py    tok/s, TTFT, latency, slot occupancy, plan-cache hits,
+                  speculative acceptance / verify-steps-per-token
 
-See DESIGN.md section Serving for the slot-array layout and masking
-invariants.
+``ServeEngine(slo=...)`` closes the runtime-precision loop (repro.adapt);
+``ServeEngine(speculate=SpecConfig(...))`` runs self-speculative decode
+rounds (repro.spec).  See DESIGN.md sections Serving / Runtime adaptation /
+Speculative decoding for the slot-array layout and masking invariants.
 """
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.metrics import ServeMetrics  # noqa: F401

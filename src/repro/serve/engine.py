@@ -27,6 +27,14 @@ and one for decode GEMMs (slots x d) — and compiles each phase under its own
 policy.  That is the paper's run-time mode switch exercised inside a single
 workload: the mode bits flip between phases while the params and the KV
 cache stream through unchanged (DESIGN.md section Serving).
+
+With ``speculate=SpecConfig(...)`` the decode phase runs self-speculative
+rounds (repro.spec): the cheap end of the mode ladder drafts ``k`` tokens
+per slot, the exact baseline step verifies all ``k+1`` positions, and a
+compiled rollback-select restores each slot to its accepted prefix —
+outputs stay bit-identical to this engine's plain greedy decode while
+expensive-mode steps per emitted token drop below 1 (DESIGN.md section
+Speculative decoding).
 """
 from __future__ import annotations
 
@@ -67,6 +75,15 @@ def _plan_phase(model: LanguageModel, tokens: int, accuracy: float,
     return LanguageModel(model.cfg.with_policy(policy)), plans
 
 
+def row_select(ax: int, new, old, active):
+    """Per-row select along a state leaf's batch axis ``ax``: rows where
+    ``active`` is False keep ``old`` exactly — the masking invariant shared
+    by the masked steps and the speculative rollback (repro.spec)."""
+    shape = [1] * new.ndim
+    shape[ax] = active.shape[0]
+    return jnp.where(active.reshape(shape), new, old)
+
+
 def _batch_axes(model: LanguageModel, slots: int, max_len: int):
     """Per-leaf batch-axis index of the per-slot DecodeState, found by
     comparing abstract shapes at two slot counts (no allocation).  Cache
@@ -102,7 +119,7 @@ class ServeEngine:
                  decode_accuracy_scale: float | None = None,
                  tune_table=None,
                  slo=None, adapt_every: int = 4, adapt: bool = True,
-                 controller=None):
+                 controller=None, speculate=None):
         """``slo`` (repro.adapt.SLO) turns on closed-loop runtime precision
         adaptation of the decode phase: the planner's decode modes become a
         mutable ModeTable whose int32 scalars feed one compiled masked step
@@ -112,7 +129,24 @@ class ServeEngine:
         controller shifts the table against the SLO.  ``adapt=False`` keeps
         the probes and mode timeline (monitoring) but never shifts — the
         instrumented static baseline the adapt benchmark compares against.
+
+        ``speculate`` (repro.spec.SpecConfig) turns on self-speculative
+        decoding: each round drafts ``k`` tokens per slot under a cheap mode
+        table, verifies all ``k+1`` positions with the exact baseline step,
+        and rolls every slot back to its accepted prefix inside one compiled
+        round — outputs stay bit-identical to the non-speculative greedy
+        engine while expensive-mode steps per emitted token drop below 1
+        (DESIGN.md section Speculative decoding).  Requires ``greedy=True``.
         """
+        if not greedy:
+            # the masked step and the solo prefill take argmax; pretending
+            # to honour a sampling flag would silently return greedy tokens
+            # (and speculative verify is only exact against greedy decode)
+            raise NotImplementedError(
+                "ServeEngine only implements greedy decoding: temperature "
+                "sampling is not wired into the masked step / prefill, and "
+                "speculative verify requires greedy argmax. Pass greedy=True."
+            )
         # metrics first: its plan-cache snapshot must predate phase planning
         # so plan_cache_delta() counts the plans this engine triggers
         self.metrics = ServeMetrics(batch_slots)
@@ -161,6 +195,13 @@ class ServeEngine:
         self.slo = slo
         self._adapt = bool(adapt)
         self._last_step_ms: float | None = None
+        #: tokens each active slot emitted in the last measured step — the
+        #: SLO's target_ms is a *per-decode-step* budget, so a speculative
+        #: round (one dispatch emitting up to k+1 tokens per slot) must be
+        #: normalized to its per-token step equivalent before the latency
+        #: comparison, or every round would read as a latency violation and
+        #: silently disable the controller's dead band (invariant iii)
+        self._last_step_tokens = 1.0
         if self.phase_plans:
             self._static_decode_label = self.phase_plans["decode"]["mlp_up"].mode.name
         else:
@@ -179,6 +220,40 @@ class ServeEngine:
         else:
             self.mode_table = None
             self.controller = None
+        # -- self-speculative decoding (repro.spec) --------------------------
+        self.spec = None
+        if speculate is not None:
+            self._init_spec(speculate)
+
+    def _init_spec(self, spec) -> None:
+        """Wire the speculative round: the verify table is the engine's live
+        adaptive table when ``slo`` is set (so the PR-4 SLO controller keeps
+        owning output quality) or the planner/policy decode modes otherwise;
+        the draft table is that table shifted ``draft_shift`` rungs down,
+        retuned at run time by the acceptance controller."""
+        from repro.adapt import ModeTable
+        from repro.spec import AcceptanceController, SpecConfig
+        from repro.spec.rollout import build_spec_round
+
+        if not isinstance(spec, SpecConfig):
+            raise TypeError(
+                f"speculate must be a repro.spec.SpecConfig, got {type(spec)}")
+        self.spec = spec
+        if self.mode_table is not None:
+            self._spec_table = self.mode_table  # adaptive verify (slo path)
+        elif self.phase_plans:
+            self._spec_table = ModeTable.from_plans(self.phase_plans["decode"])
+        else:
+            self._spec_table = ModeTable.from_policy(self.model_decode.cfg.policy)
+        ladder = int(self._spec_table.max_mode) - int(self._spec_table.min_mode)
+        self._draft_shift = max(1, min(spec.draft_shift, max(ladder, 1)))
+        self._accept_ctrl = (
+            AcceptanceController(spec, ladder, shift=self._draft_shift)
+            if spec.adapt and ladder > 0 else None)
+        self._spec_round = jax.jit(build_spec_round(
+            self.model_decode, self._axes, spec.k,
+            modal_verify=self.slo is not None))
+        self._spec_window = [0, 0]  # (drafted, agreed) since last tick
 
     # -- compiled pieces -----------------------------------------------------
 
@@ -188,13 +263,9 @@ class ServeEngine:
         and empty slots are inert, so a freed slot can be re-filled at any
         step without touching the others."""
         logits, new_state = self.model_decode.decode_step(params, tokens, state)
-
-        def sel(ax, new, old):
-            shape = [1] * new.ndim
-            shape[ax] = active.shape[0]
-            return jnp.where(active.reshape(shape), new, old)
-
-        merged = jax.tree.map(sel, self._axes, new_state, state)
+        merged = jax.tree.map(
+            lambda ax, new, old: row_select(ax, new, old, active),
+            self._axes, new_state, state)
         return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), merged
 
     def _scatter_slot(self, state, solo, slot):
@@ -216,13 +287,9 @@ class ServeEngine:
         with bind_modes(modes):
             logits, new_state = self.model_decode.decode_step(
                 params, tokens, state)
-
-        def sel(ax, new, old):
-            shape = [1] * new.ndim
-            shape[ax] = active.shape[0]
-            return jnp.where(active.reshape(shape), new, old)
-
-        merged = jax.tree.map(sel, self._axes, new_state, state)
+        merged = jax.tree.map(
+            lambda ax, new, old: row_select(ax, new, old, active),
+            self._axes, new_state, state)
         return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), merged
 
     def _probe_fn(self, params, tokens, state, active, cur, ref, down):
@@ -258,39 +325,131 @@ class ServeEngine:
         emission order."""
         events: list[tuple[int, int]] = []
         for slot, ticket in self.scheduler.admit():
+            if slot < 0:
+                # zero-budget admission (nothing fits the cache): the
+                # scheduler completed it without a slot — route the
+                # completion through metrics so summary()["completed"]
+                # agrees with drain()/scheduler.completed
+                self.metrics.on_done(ticket.rid)
+                continue
             first = self._prefill_slot(slot, ticket)
             self.metrics.on_first_token(ticket.rid)
             events.append((ticket.rid, first))
             self._emit(ticket, slot, first)
         if self._active.any():
-            tokens = jnp.asarray(self._last_tok[:, None])
-            active = jnp.asarray(self._active)
-            t0 = time.perf_counter()
-            if self.slo is not None:
-                next_tok, self.state = self._step_modal(
-                    self.params, tokens, self.state, active,
-                    self.mode_table.scalars(),
-                )
+            if self.spec is not None:
+                events.extend(self._spec_step())
             else:
-                next_tok, self.state = self._step(
-                    self.params, tokens, self.state, active)
-            produced = np.asarray(next_tok)  # syncs the step
-            self._last_step_ms = (time.perf_counter() - t0) * 1e3
-            self.metrics.on_decode_step(
-                int(self._active.sum()),
-                mode=(self.mode_table.label() if self.mode_table is not None
-                      else self._static_decode_label),
-            )
-            for slot in np.nonzero(self._active)[0]:
-                ticket = self.scheduler.by_slot[int(slot)]
-                tok = int(produced[slot])
-                events.append((ticket.rid, tok))
-                self._emit(ticket, int(slot), tok)
+                events.extend(self._decode_step())
             if (self.slo is not None
                     and self.metrics.decode_steps % self.adapt_every == 0
                     and self._active.any()):
                 self._adapt_tick()
         return events
+
+    def _decode_step(self) -> list[tuple[int, int]]:
+        """One masked batched decode step (the non-speculative path)."""
+        events: list[tuple[int, int]] = []
+        tokens = jnp.asarray(self._last_tok[:, None])
+        active = jnp.asarray(self._active)
+        t0 = time.perf_counter()
+        if self.slo is not None:
+            next_tok, self.state = self._step_modal(
+                self.params, tokens, self.state, active,
+                self.mode_table.scalars(),
+            )
+        else:
+            next_tok, self.state = self._step(
+                self.params, tokens, self.state, active)
+        produced = np.asarray(next_tok)  # syncs the step
+        self._last_step_ms = (time.perf_counter() - t0) * 1e3
+        self.metrics.on_decode_step(
+            int(self._active.sum()),
+            mode=(self.mode_table.label() if self.mode_table is not None
+                  else self._static_decode_label),
+        )
+        for slot in np.nonzero(self._active)[0]:
+            ticket = self.scheduler.by_slot[int(slot)]
+            tok = int(produced[slot])
+            events.append((ticket.rid, tok))
+            self._emit(ticket, int(slot), tok)
+        return events
+
+    def _spec_step(self) -> list[tuple[int, int]]:
+        """One speculative round: draft k cheap tokens per slot, verify all
+        k+1 positions with the exact baseline step, emit each slot's
+        accepted prefix plus the correction token (clamped to its remaining
+        decode budget), and roll the state back inside the compiled round."""
+        events: list[tuple[int, int]] = []
+        active_np = self._active.copy()
+        tokens = jnp.asarray(self._last_tok[:, None])
+        active = jnp.asarray(active_np)
+        t0 = time.perf_counter()
+        drafts, greedy, n_acc, self.state = self._spec_round(
+            self.params, tokens, self.state, active,
+            self._spec_table.scalars_shifted(-self.draft_shift),
+            self._spec_table.scalars(),
+        )
+        drafts = np.asarray(drafts)  # (k, B)
+        greedy = np.asarray(greedy)  # (k+1, B)
+        n_acc = np.asarray(n_acc)  # (B,) — syncs the round
+        self._last_step_ms = (time.perf_counter() - t0) * 1e3
+        n_active = int(active_np.sum())
+        self.metrics.on_decode_step(
+            n_active,
+            mode=(self.mode_table.label() if self.mode_table is not None
+                  else self._static_decode_label),
+        )
+        accepted = agreed = emitted = 0
+        for slot in np.nonzero(active_np)[0]:
+            ticket = self.scheduler.by_slot[int(slot)]
+            j = int(n_acc[slot])
+            # two accounts: metrics credit only drafts that were *emitted*
+            # (a budget-truncated tail did no useful work), while the
+            # controller sees raw draft/verify *agreement* — truncation says
+            # nothing about draft quality and must not read as rejection
+            agreed += j
+            accepted += min(j, ticket.remaining)
+            burst = [int(drafts[i, slot]) for i in range(j)]
+            burst.append(int(greedy[j, slot]))  # correction / bonus token
+            for tok in burst[:ticket.remaining]:
+                events.append((ticket.rid, tok))
+                self._emit(ticket, int(slot), tok)
+                emitted += 1
+        self._last_step_tokens = emitted / n_active if n_active else 1.0
+        self.metrics.on_spec_round(
+            n_active, drafted=self.spec.k * n_active,
+            accepted=accepted, emitted=emitted)
+        self._spec_window[0] += self.spec.k * n_active
+        self._spec_window[1] += agreed
+        if (self._accept_ctrl is not None
+                and self.metrics.spec_rounds % self.spec.every == 0):
+            self._spec_adapt_tick()
+        return events
+
+    def _spec_adapt_tick(self) -> None:
+        """Feed the windowed draft/verify disagreement rate to the
+        acceptance controller; an applied decision moves ``draft_shift``
+        one rung (repro.spec)."""
+        drafted, agreed = self._spec_window
+        if not drafted:
+            return
+        self._spec_window = [0, 0]
+        before = self._accept_ctrl.shift
+        self._accept_ctrl.observe(
+            self.metrics.spec_rounds, 1.0 - agreed / drafted)
+        if self._accept_ctrl.shift != before:
+            self.metrics.on_draft_shift(
+                self.metrics.spec_rounds, self._accept_ctrl.shift)
+
+    @property
+    def draft_shift(self) -> int:
+        """Current rungs between the verify and draft tables (repro.spec)."""
+        if self.spec is None:
+            raise AttributeError("engine was built without speculate=")
+        if self._accept_ctrl is not None:
+            return self._accept_ctrl.shift
+        return self._draft_shift
 
     def _adapt_tick(self) -> None:
         """One probe + controller observation; applies the shift when
@@ -308,9 +467,12 @@ class ServeEngine:
         )
         err_cur, err_down = float(err_cur), float(err_down)
         self.metrics.on_probe(err_cur)
+        step_ms = self._last_step_ms
+        if step_ms is not None:
+            step_ms /= max(self._last_step_tokens, 1.0)
         decision = self.controller.observe(
             self.metrics.decode_steps, err_cur, err_down,
-            step_ms=self._last_step_ms,
+            step_ms=step_ms,
             can_up=not table.at_max, can_down=not table.at_min)
         if self._adapt and decision:
             if table.shift_all(decision, tag=self.metrics.decode_steps):
@@ -359,6 +521,36 @@ class ServeEngine:
         fn = self._step_modal if self.slo is not None else self._step
         cache_size = getattr(fn, "_cache_size", None)
         return cache_size() if callable(cache_size) else None
+
+    @property
+    def spec_compile_count(self) -> int | None:
+        """Compiled speculative-round variants (None when jax does not
+        expose the cache).  Stays 1 across draft-shift and mode-table
+        changes — the shift rides in as mode scalars, never a retrace."""
+        if self.spec is None:
+            return None
+        cache_size = getattr(self._spec_round, "_cache_size", None)
+        return cache_size() if callable(cache_size) else None
+
+    def describe_speculation(self) -> str:
+        if self.spec is None:
+            return "speculation off (no speculate=)"
+        s = self.metrics.summary()
+        acc = s["acceptance_rate"]
+        vspt = s["verify_steps_per_token"]
+        ctrl = ""
+        if self._accept_ctrl is not None:
+            ctrl = (f" | {self._accept_ctrl.shallower_moves} shallower / "
+                    f"{self._accept_ctrl.deeper_moves} deeper moves")
+        return (
+            f"k={self.spec.k} draft_shift={self.draft_shift} "
+            f"(verify {self._spec_table.describe()}) | "
+            f"{s['spec_rounds']} rounds | acceptance "
+            + (f"{acc:.2f}" if acc is not None else "-")
+            + " | verify-steps/token "
+            + (f"{vspt:.2f}" if vspt is not None else "-")
+            + ctrl
+        )
 
     def describe_adaptation(self) -> str:
         if self.mode_table is None:

@@ -43,6 +43,16 @@ class ServeMetrics:
         self.mode_switches = 0
         self.mode_timeline: list[tuple[int, str]] = []  # (decode_step, label)
         self.probe_errs: list[tuple[int, float]] = []  # (decode_step, err)
+        # speculative decoding (repro.spec): per-round draft/accept counts.
+        # spec_slot_rounds counts (round, active slot) pairs — each is one
+        # expensive-mode verify execution for that slot, the numerator of
+        # verify_steps_per_token.
+        self.spec_rounds = 0
+        self.spec_slot_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
+        self.draft_shift_timeline: list[tuple[int, int]] = []  # (round, shift)
         self._t_first_event: float | None = None
         self._t_last_event: float | None = None
         snap = plan_cache_stats()
@@ -86,18 +96,63 @@ class ServeMetrics:
     def on_probe(self, err: float) -> None:
         self.probe_errs.append((self.decode_steps, float(err)))
 
+    def on_spec_round(self, n_active: int, *, drafted: int, accepted: int,
+                      emitted: int) -> None:
+        """One speculative round (repro.spec): ``drafted`` cheap-mode draft
+        tokens proposed across the active slots, ``accepted`` of them kept
+        by verify, ``emitted`` tokens actually produced (accepted prefixes
+        plus correction tokens, clamped to each slot's budget)."""
+        self.spec_rounds += 1
+        self.spec_slot_rounds += n_active
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
+
+    def on_draft_shift(self, round_idx: int, shift: int) -> None:
+        """One applied acceptance-controller move of the draft-mode shift."""
+        self.draft_shift_timeline.append((round_idx, shift))
+
     def on_done(self, rid: int) -> None:
         self.requests[rid].done = self._mark()
 
     # -- derived -------------------------------------------------------------
 
     def ttft(self, rid: int) -> float | None:
-        r = self.requests[rid]
-        return None if r.first_token is None else r.first_token - r.submit
+        """Time to first token, or None when the rid is unknown or has no
+        first token yet (never raises — callers poll mid-flight rids)."""
+        r = self.requests.get(rid)
+        if r is None or r.first_token is None:
+            return None
+        return r.first_token - r.submit
 
     def latency(self, rid: int) -> float | None:
-        r = self.requests[rid]
-        return None if r.done is None else r.done - r.submit
+        """Submit-to-done latency, or None when the rid is unknown or not
+        done yet (never raises — callers poll mid-flight rids)."""
+        r = self.requests.get(rid)
+        if r is None or r.done is None:
+            return None
+        return r.done - r.submit
+
+    @property
+    def acceptance_rate(self) -> float | None:
+        """Fraction of drafted tokens the verify chain accepted."""
+        if not self.spec_drafted:
+            return None
+        return self.spec_accepted / self.spec_drafted
+
+    @property
+    def verify_steps_per_token(self) -> float | None:
+        """Expensive-mode verify *dispatches* per emitted decode token —
+        (round, active slot) pairs over tokens emitted by rounds.  This is
+        the sequential-latency unit of decode (the baseline engine pays
+        exactly 1.0 per token by construction; any acceptance pushes it
+        below 1), NOT a FLOP count: the verify chain still computes every
+        position, it just does so inside one dispatch per round.  The
+        FLOP-level saving comes separately from the draft substeps running
+        the cheap limb modes (DESIGN.md section Speculative decoding)."""
+        if not self.spec_emitted:
+            return None
+        return self.spec_slot_rounds / self.spec_emitted
 
     @property
     def occupancy(self) -> float:
@@ -147,6 +202,14 @@ class ServeMetrics:
             "probe_err_mean": (sum(e for _, e in self.probe_errs)
                                / len(self.probe_errs)
                                if self.probe_errs else None),
+            "spec_rounds": self.spec_rounds,
+            "spec_drafted": self.spec_drafted,
+            "spec_accepted": self.spec_accepted,
+            "spec_rejected": self.spec_drafted - self.spec_accepted,
+            "spec_emitted": self.spec_emitted,
+            "acceptance_rate": self.acceptance_rate,
+            "verify_steps_per_token": self.verify_steps_per_token,
+            "draft_shift_moves": len(self.draft_shift_timeline),
             "plan_cache": self.plan_cache_delta(),
         }
 
@@ -167,4 +230,9 @@ class ServeMetrics:
         if s["probe_err_max"] is not None:
             out += (f" | probe err mean {s['probe_err_mean']:.2e} "
                     f"max {s['probe_err_max']:.2e}")
+        if s["spec_rounds"]:
+            out += (f" | spec {s['spec_rounds']} rounds, acceptance "
+                    f"{s['acceptance_rate']:.2f}, verify-steps/token "
+                    f"{s['verify_steps_per_token']:.2f}"
+                    f" ({s['draft_shift_moves']} draft-shift moves)")
         return out

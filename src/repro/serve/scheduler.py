@@ -50,6 +50,12 @@ class Ticket:
     def done(self) -> bool:
         return self.state == DONE
 
+    @property
+    def remaining(self) -> int:
+        """Decode budget left — the clamp for multi-token (speculative)
+        emission bursts: a burst never emits past the budget mid-round."""
+        return max(self.budget - len(self.tokens), 0)
+
 
 def ragged_requests(n: int, vocab: int, prompt_len: int, max_new: int,
                     rng: np.random.Generator) -> list[Request]:
@@ -108,14 +114,24 @@ class Scheduler:
 
     def admit(self) -> list[tuple[int, Ticket]]:
         """Move waiting requests into free slots, FIFO, until either runs
-        out.  Admitted tickets transition WAITING -> PREFILL."""
+        out.  Admitted tickets transition WAITING -> PREFILL.  Zero-budget
+        tickets (nothing fits the cache) complete immediately without a
+        slot and are returned as ``(-1, ticket)`` so the caller can route
+        the completion event (the engine's metrics must agree with
+        ``completed`` — completing them silently here undercounted
+        ``ServeMetrics.summary()['completed']``)."""
         out = []
-        while self.queue and self.free:
-            t = self.queue.popleft()
-            if t.budget == 0:  # nothing fits: complete immediately, no slot
-                t.state = DONE
-                self.completed.append(t.rid)
+        while self.queue:
+            if self.queue[0].budget == 0:
+                # nothing fits: complete immediately — needs no slot, so it
+                # must not wait behind slot contention either
+                t = self.queue.popleft()
+                self.complete(t.rid)
+                out.append((-1, t))
                 continue
+            if not self.free:
+                break
+            t = self.queue.popleft()
             slot = self.free.popleft()
             t.slot = slot
             t.state = PREFILL

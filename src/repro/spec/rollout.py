@@ -1,0 +1,159 @@
+"""The compiled speculative round: draft k cheap, verify k+1 exact, roll back.
+
+One round over the serve engine's slot array (B = slots):
+
+  1. **draft** — ``k`` single-token substeps of the same compiled decode
+     body under the *draft* mode table (``bind_modes``: the mode-select
+     scalars are jit arguments, so changing the draft depth costs zero
+     recompiles).  The draft runs on a scratch copy of the state: its
+     low-precision KV writes and recurrent updates are never kept.
+  2. **verify** — ``k + 1`` substeps of the *exact baseline step* (static
+     plans, or the live adaptive table when the engine adapts) from the same
+     pre-round state, over the inputs ``[t0, d1..dk]``.  Greedy argmax at
+     position ``i`` is precisely the token the non-speculative engine would
+     have emitted after the first ``i`` inputs — so the longest prefix where
+     draft and verify agree, plus verify's correction token at the first
+     disagreement, *is* the baseline token sequence (bit-identical outputs).
+  3. **rollback-select** — one compiled select restores every slot to its
+     accepted prefix, per leaf kind:
+
+       * KV ``length`` / ``DecodeState.position``: arithmetic
+         (``len0 + 1 + n_acc``);
+       * KV rows (``k``/``v``/scales/``pos``): entries the verify chain
+         wrote past the accepted point are restored from the pre-round
+         cache by a ``pos > len0 + n_acc`` mask — this also repairs
+         sliding-window ring buffers, whose rejected writes land on top of
+         still-live old-window rows;
+       * recurrent states (SSM / RG-LRU / conv): gathered per slot from the
+         per-substep snapshot stack at index ``n_acc`` (these are small —
+         the KV cache itself is never stacked);
+       * inactive rows keep their exact pre-round state (the engine's
+         masking invariant).
+
+The whole round is one function, jitted once per engine: mode tables, draft
+shift and acceptance all ride in as array arguments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.adapt import bind_modes
+from repro.models.layers import KVCache
+from repro.serve.engine import row_select as _sel  # the masked-step freeze
+
+
+def _is_kv(x) -> bool:
+    return isinstance(x, KVCache)
+
+
+def _gather_substep(stacked, n_acc, ax: int):
+    """Pick snapshot ``n_acc[b]`` per slot from a (k+1, ...)-stacked leaf
+    whose unstacked batch axis is ``ax``."""
+    shape = [1] * stacked.ndim
+    shape[ax + 1] = n_acc.shape[0]
+    idx = n_acc.reshape(shape).astype(jnp.int32)
+    return jnp.take_along_axis(stacked, idx, axis=0)[0]
+
+
+def snapshot(state):
+    """The rollback payload of one verify substep: every leaf except the KV
+    caches (those roll back via length arithmetic + the pos-mask select, so
+    stacking them across substeps would be k+1 copies of decode memory)."""
+    return jax.tree.map(lambda n: None if _is_kv(n) else n, state,
+                        is_leaf=_is_kv)
+
+
+def _roll_kv(axn: KVCache, c0: KVCache, cf: KVCache, n_acc, active) -> KVCache:
+    """Roll one KV cache node back to its accepted prefix.
+
+    ``axn`` carries the per-leaf batch axes (layer-stacked caches put batch
+    at axis 1, un-stacked hybrid remainders at axis 0); ``c0``/``cf`` are
+    the pre-round and post-verify nodes.  Entries with a stored position
+    past the last accepted token were written by rejected substeps: their
+    rows (and ring slots — for sliding windows they overwrote live old
+    rows) are restored from ``c0``.
+    """
+    shape = [1] * c0.length.ndim
+    shape[axn.length] = n_acc.shape[0]
+    keep_last = c0.length + n_acc.reshape(shape)  # position of last kept token
+    mask = cf.pos > keep_last[..., None]  # (..., B, Smax): rejected writes
+
+    def mix(fresh, old):
+        m = mask.reshape(mask.shape + (1,) * (fresh.ndim - mask.ndim))
+        return jnp.where(m, old, fresh)
+
+    rolled = KVCache(
+        k=mix(cf.k, c0.k),
+        v=mix(cf.v, c0.v),
+        k_scale=None if cf.k_scale is None else mix(cf.k_scale, c0.k_scale),
+        v_scale=None if cf.v_scale is None else mix(cf.v_scale, c0.v_scale),
+        pos=jnp.where(mask, c0.pos, cf.pos),
+        length=keep_last + 1,
+    )
+    return jax.tree.map(lambda ax, new, old: _sel(ax, new, old, active),
+                        axn, rolled, c0)
+
+
+def rollback(axes, state0, state_fin, snaps, n_acc, active):
+    """One compiled rollback-select over the whole DecodeState pytree."""
+
+    def roll(axn, s0n, finn, snapn):
+        if _is_kv(axn):
+            return _roll_kv(axn, s0n, finn, n_acc, active)
+        return _sel(axn, _gather_substep(snapn, n_acc, axn), s0n, active)
+
+    return jax.tree.map(roll, axes, state0, state_fin, snaps, is_leaf=_is_kv)
+
+
+def build_spec_round(model, axes, k: int, modal_verify: bool):
+    """Build the pure round function for ``model`` (jit it once).
+
+    ``axes``: the engine's per-leaf batch-axis pytree (``_batch_axes``).
+    ``modal_verify``: bind the verify substeps to the engine's live mode
+    table (the adaptive engines' baseline is the modal step); when False the
+    verify substeps run the static-plan path — the exact executable the
+    PR-2 baseline engine steps with.
+
+    Returned signature::
+
+        round_fn(params, tokens, state, active, draft_modes, verify_modes)
+            -> (drafts (k, B), greedy (k+1, B), n_acc (B,), new_state)
+    """
+    if k < 1:
+        raise ValueError(f"draft depth k must be >= 1, got {k}")
+
+    def round_fn(params, tokens, state, active, draft_modes, verify_modes):
+        # -- draft: k cheap-mode substeps on a scratch state ----------------
+        def draft_body(carry, _):
+            tok, st = carry
+            with bind_modes(draft_modes):
+                logits, st2 = model.decode_step(params, tok, st)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return (nxt[:, None], st2), nxt
+
+        (_, _), drafts = jax.lax.scan(
+            draft_body, (tokens, state), None, length=k)  # drafts: (k, B)
+
+        # -- verify: k+1 exact baseline substeps from the pre-round state ---
+        inputs = jnp.concatenate([tokens, drafts.T], axis=1)  # (B, k+1)
+
+        def verify_body(st, tok_col):
+            if modal_verify:
+                with bind_modes(verify_modes):
+                    logits, st2 = model.decode_step(params, tok_col[:, None], st)
+            else:
+                logits, st2 = model.decode_step(params, tok_col[:, None], st)
+            g = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return st2, (g, snapshot(st2))
+
+        state_fin, (greedy, snaps) = jax.lax.scan(
+            verify_body, state, inputs.T)  # greedy: (k+1, B)
+
+        # -- accept the longest agreeing prefix, roll back the rest ---------
+        match = (drafts == greedy[:-1]).astype(jnp.int32)  # (k, B)
+        n_acc = jnp.sum(jnp.cumprod(match, axis=0), axis=0)  # (B,) in [0, k]
+        new_state = rollback(axes, state, state_fin, snaps, n_acc, active)
+        return drafts, greedy, n_acc, new_state
+
+    return round_fn

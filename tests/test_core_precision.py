@@ -7,6 +7,7 @@ Validates the paper's central claims at the numeric level:
   * GRTE rounding (Eq. 10) behaves between truncation and RNE
 """
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -155,6 +156,24 @@ class TestRuntimeReconfiguration:
 
 
 class TestRounding:
+    @pytest.mark.parametrize("keep", [0, -1, -5])
+    def test_nonpositive_keep_bits_rejected(self, keep):
+        # satellite regression: the oracle clamped keep_bits from above
+        # (min(keep_bits, 23)) but not from below — keep_bits <= 0 made
+        # drop > 23 and the mask/carry corrupted exponent and sign
+        x = jnp.asarray(np.float32([1.5, -2.25, 3.0]))
+        with pytest.raises(ValueError, match="keep_bits must be >= 1"):
+            quantize_mantissa(x, keep)
+
+    def test_keep_one_bit_stays_a_float(self):
+        # the smallest legal width must still return a sane coarse float
+        # (sign and exponent untouched up to the documented rounding carry)
+        x = jnp.asarray(np.float32([1.9, -1.9, 0.7]))
+        q = np.asarray(quantize_mantissa(x, 1, "trunc"))
+        assert np.all(np.sign(q) == np.sign(np.asarray(x)))
+        assert np.all(np.abs(q) <= np.abs(np.asarray(x)))
+        assert np.all(np.isfinite(q))
+
     @given(st.integers(1, 22), st.sampled_from(["trunc", "rne", "grte"]))
     @settings(max_examples=30, deadline=None)
     def test_error_bounded_by_kept_bits(self, keep, rounding):

@@ -98,3 +98,12 @@ class TestQuantizeMantissaKernel:
         x = np.array([np.inf, -np.inf, np.nan, 0.0], np.float32)
         out = np.asarray(quantize_mantissa_op(jnp.asarray(x), 7, "grte", interpret=True))
         assert np.isinf(out[0]) and np.isinf(out[1]) and np.isnan(out[2]) and out[3] == 0
+
+    @pytest.mark.parametrize("keep", [0, -1, -8])
+    def test_nonpositive_keep_rejected(self, rng, keep):
+        # satellite regression: keep <= 0 used to make drop > 23 so the
+        # kept-mask and rounding carry reached the exponent/sign fields and
+        # returned garbage instead of an error
+        x = jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+        with pytest.raises(ValueError, match="keep must be >= 1"):
+            quantize_mantissa_op(x, keep, "grte", interpret=True)

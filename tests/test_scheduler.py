@@ -68,6 +68,19 @@ class TestScheduler:
         s.submit(_req(1, n=4, max_new=5))
         assert s.tickets[1].budget == 5
 
+    def test_zero_budget_completes_even_without_free_slot(self):
+        # a zero-budget request consumes no slot, so it must not wait
+        # behind slot contention: admit() drains it as (-1, ticket) while
+        # every slot is occupied
+        s = Scheduler(slots=1, max_len=32)
+        s.submit(_req(0))
+        (_, t0), = s.admit()
+        s.submit(Request(prompt=np.arange(4, dtype=np.int32), max_new=0, rid=1))
+        out = s.admit()
+        assert out == [(-1, s.tickets[1])]
+        assert s.tickets[1].done and not t0.done
+        assert s.completed == [1]
+
     def test_submit_validation(self):
         s = Scheduler(slots=1, max_len=8)
         with pytest.raises(ValueError, match="exceeds max_len"):

@@ -3,6 +3,7 @@ ring-buffer sliding window."""
 import dataclasses
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -100,6 +101,43 @@ class TestServeEngine:
         out2 = eng2.generate_batch(reqs)
         assert out1 == out2
         assert all(len(v) == 5 for v in out1.values())
+
+    def test_non_greedy_raises(self):
+        # satellite regression: greedy=False used to be silently ignored
+        # (the masked step and the prefill hard-code argmax) — the contract
+        # is now explicit at construction time
+        cfg, model, params = _tiny()
+        with pytest.raises(NotImplementedError, match="greedy"):
+            ServeEngine(model, params, batch_slots=1, max_len=16, greedy=False)
+
+    def test_zero_budget_request_reaches_metrics(self):
+        # satellite regression: budget-0 requests (max_new=0, or a prompt
+        # filling the whole cache) used to complete inside Scheduler.admit()
+        # without ever reaching ServeMetrics.on_done, so summary()
+        # ["completed"] undercounted vs drain()/scheduler.completed
+        cfg, model, params = _tiny()
+        eng = ServeEngine(model, params, batch_slots=2, max_len=16)
+        rng = np.random.default_rng(0)
+        eng.submit(Request(prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                           max_new=0, rid=0))
+        eng.submit(Request(prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                           max_new=3, rid=1))
+        done = eng.drain()
+        assert sorted(done) == [0, 1] and done[0] == []
+        s = eng.metrics.summary()
+        assert s["completed"] == len(eng.scheduler.completed) == 2
+        assert eng.metrics.latency(0) is not None
+
+    def test_metrics_unknown_rid_returns_none(self):
+        # satellite regression: ttft()/latency() raised KeyError for rids
+        # never submitted instead of the documented None
+        from repro.serve.metrics import ServeMetrics
+
+        m = ServeMetrics(2)
+        assert m.ttft(12345) is None
+        assert m.latency(12345) is None
+        m.on_submit(7)
+        assert m.ttft(7) is None and m.latency(7) is None  # mid-flight
 
     def test_greedy_matches_stepwise_apply(self):
         # engine's cached decode must agree with re-running apply() each step

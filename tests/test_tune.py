@@ -429,6 +429,52 @@ class TestCheckRegression:
         assert report["violations"] == []
 
 
+class TestSpecGate:
+    """Semantic gate for BENCH_spec.json (check_regression --spec-new)."""
+
+    def _cell(self, **over):
+        cell = {
+            "k": 2, "draft_shift": 1, "adaptive_shift": False,
+            "accuracy": None, "exact_match": True, "acceptance_rate": 0.9,
+            "verify_steps_per_token": 0.5, "spec_compile_count": 1,
+        }
+        cell.update(over)
+        return cell
+
+    def _problems(self, cells):
+        from benchmarks.check_regression import spec_semantics
+
+        return spec_semantics({"cells": cells})
+
+    def test_clean_doc_passes(self):
+        assert self._problems([self._cell(), self._cell(k=4)]) == []
+
+    def test_committed_bench_spec_passes(self):
+        from benchmarks.check_regression import load, spec_semantics
+
+        assert spec_semantics(load(os.path.join(REPO, "BENCH_spec.json"))) == []
+
+    def test_output_divergence_fails(self):
+        probs = self._problems([self._cell(exact_match=False)])
+        assert any("diverged" in p for p in probs)
+
+    def test_inert_speculation_fails(self):
+        probs = self._problems(
+            [self._cell(acceptance_rate=0.0, verify_steps_per_token=1.0)])
+        assert any("inert" in p for p in probs)
+
+    def test_retrace_fails(self):
+        probs = self._problems([self._cell(spec_compile_count=3)])
+        assert any("retrace" in p for p in probs)
+
+    def test_verify_cost_above_baseline_fails(self):
+        probs = self._problems([self._cell(verify_steps_per_token=1.4)])
+        assert any("above the baseline cost" in p for p in probs)
+
+    def test_empty_doc_fails(self):
+        assert self._problems([]) == ["no spec cells found"]
+
+
 class TestDocsDrift:
     def test_check_detects_stale_block(self, tmp_path, capsys):
         from benchmarks.make_experiments_md import (
