@@ -149,6 +149,70 @@ def adapt_semantics(doc: dict, *, check_throughput: bool = False) -> list[str]:
     return problems
 
 
+def tenant_semantics(doc: dict) -> list[str]:
+    """Machine-independent invariants of a fresh BENCH_tenant.json — the
+    multi-tenant scheduling claims, all measured in engine steps (never
+    wall clock), so they gate identically on any host:
+
+      * every cell's outputs are bit-identical to each request's solo run
+        (``all_exact``) — scheduling, preemption and resume must never
+        change tokens;
+      * every submitted request completed in every cell (no starvation
+        under either policy — aging must make the priority policy drain);
+      * per arch, the high-priority tenant's SLO attainment under the
+        priority policy is >= its FIFO attainment, and strictly better in
+        at least one arch (otherwise the scheduler buys nothing);
+      * the priority cells actually preempted somewhere (the contention in
+        the workload is real, not vacuously satisfied).
+
+    Returns a list of violation strings (empty = pass).
+    """
+    problems = []
+    cells = doc.get("cells", [])
+    if not cells:
+        return ["no tenant cells found"]
+    hp = doc.get("high_priority_tenant", "interactive")
+    by_arch: dict[str, dict[str, dict]] = {}
+    for c in cells:
+        key = f"{c.get('arch')}/{c.get('policy')}"
+        if not c.get("all_exact"):
+            problems.append(
+                f"{key}: outputs diverged from solo runs "
+                f"({c.get('n_exact')}/{c.get('requests')} exact)")
+        if c.get("completed") != c.get("requests"):
+            problems.append(
+                f"{key}: {c.get('completed')}/{c.get('requests')} completed "
+                "(starvation)")
+        by_arch.setdefault(c.get("arch"), {})[c.get("policy")] = c
+    strictly_better = False
+    any_preempt = False
+    for arch, pols in sorted(by_arch.items()):
+        fifo, prio = pols.get("fifo"), pols.get("priority")
+        if fifo is None or prio is None:
+            problems.append(f"{arch}: missing a policy cell")
+            continue
+        any_preempt |= prio.get("preemptions", 0) > 0
+        att_f = (fifo.get("tenants", {}).get(hp) or {}).get("attainment")
+        att_p = (prio.get("tenants", {}).get(hp) or {}).get("attainment")
+        if att_f is None or att_p is None:
+            problems.append(f"{arch}: no {hp} attainment measured")
+            continue
+        if att_p < att_f:
+            problems.append(
+                f"{arch}: priority attainment {att_p} below FIFO {att_f} "
+                f"for {hp}")
+        elif att_p > att_f:
+            strictly_better = True
+    if not strictly_better:
+        problems.append(
+            f"{hp} attainment never strictly beat FIFO: the workload is not "
+            "exercising the priority scheduler")
+    if not any_preempt:
+        problems.append(
+            "no priority cell preempted: contention is vacuous")
+    return problems
+
+
 def spec_semantics(doc: dict) -> list[str]:
     """Machine-independent invariants of a fresh BENCH_spec.json — the
     self-speculative-decoding claim itself, not a wall-clock ratio:
@@ -295,6 +359,14 @@ def main(argv: list[str] | None = None) -> int:
         "acceptance > 0 with verify-steps/token < 1, one compiled round)",
     )
     ap.add_argument(
+        "--tenant-new",
+        default="",
+        help="fresh BENCH_tenant.json; checked for the machine-independent "
+        "multi-tenant invariants (all outputs exact vs solo, no starvation, "
+        "priority attainment >= FIFO for the high-priority tenant and "
+        "strictly better somewhere, real preemption)",
+    )
+    ap.add_argument(
         "--adapt-strict",
         action="store_true",
         help="also fail on the adapted-vs-safe throughput invariant "
@@ -353,6 +425,15 @@ def main(argv: list[str] | None = None) -> int:
                 adapt_cells(doc),
                 args,
             )
+    if args.tenant_new:
+        ran = True
+        problems = tenant_semantics(load(args.tenant_new))
+        for p in problems:
+            print(f"tenant (semantics): FAIL {p}")
+        if not problems:
+            print("tenant (semantics): ok (outputs exact, no starvation, "
+                  "priority attainment beats FIFO, preemption exercised)")
+        ok &= not problems
     if args.spec_new:
         ran = True
         problems = spec_semantics(load(args.spec_new))

@@ -26,6 +26,7 @@ BENCH_TUNE = os.path.join(os.path.dirname(__file__), "..", "BENCH_tune.json")
 BENCH_SERVE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 BENCH_ADAPT = os.path.join(os.path.dirname(__file__), "..", "BENCH_adapt.json")
 BENCH_SPEC = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
+BENCH_TENANT = os.path.join(os.path.dirname(__file__), "..", "BENCH_tenant.json")
 EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
 BEGIN_MARK = "<!-- BEGIN GENERATED (benchmarks/make_experiments_md.py) -->"
 END_MARK = "<!-- END GENERATED -->"
@@ -349,6 +350,56 @@ def spec_section() -> list[str]:
     ]
 
 
+def load_bench_tenant(path: str = BENCH_TENANT) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def tenant_table(doc: dict) -> list[str]:
+    out = ["| arch | policy | tenant | done | attainment | p50 | p99 | share (entitled) | preempts | exact |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in doc.get("cells", []):
+        exact = ("yes" if c.get("all_exact")
+                 else f"**{c.get('n_exact')}/{c.get('requests')}**")
+        for name in sorted(c.get("tenants", {})):
+            t = c["tenants"][name]
+            att = (f"{t['attainment']:.0%}" if t["attainment"] is not None
+                   else "-")
+            out.append(
+                f"| {c['arch']} | {c['policy']} | {name} "
+                f"| {t['completed']}/{t['submitted']} | {att} "
+                f"| {fmt_s(t['latency_p50_s'])} | {fmt_s(t['latency_p99_s'])} "
+                f"| {t['slot_share']:.2f} ({t['entitlement']:.2f}) "
+                f"| {t['preemptions']} | {exact} |"
+            )
+    return out
+
+
+def tenant_section() -> list[str]:
+    doc = load_bench_tenant()
+    if doc is None:
+        return ["### Tenant sweep\n",
+                "_BENCH_tenant.json not found — run "
+                "`python -m benchmarks.tenant_sweep` first._\n"]
+    hp = doc.get("high_priority_tenant", "interactive")
+    return [
+        f"### Tenant sweep (BENCH_tenant.json, host={doc['host_backend']}, "
+        f"{doc['slots']} slots, seeded Poisson arrivals)\n",
+        "Multi-tenant scheduling (`repro.serve` tenancy): identical mixed "
+        "traffic — bulk batch decodes flooding the slots first, then "
+        "interactive chat and audio-length prompts with step-unit deadlines "
+        "— under pure FIFO vs the priority+EDF+aging scheduler.  Deadlines "
+        "and attainment are measured in engine steps (machine-independent); "
+        f"the gate requires the `{hp}` tenant's attainment to beat FIFO "
+        "while every request stays bit-identical to its solo run "
+        "(preemption parks and resumes exact state rows):\n",
+        "\n".join(tenant_table(doc)),
+        "",
+    ]
+
+
 def generated_sections() -> str:
     parts: list[str] = []
     doc = load_bench_plan()
@@ -374,6 +425,7 @@ def generated_sections() -> str:
     parts.extend(serve_section())
     parts.extend(adapt_section())
     parts.extend(spec_section())
+    parts.extend(tenant_section())
     recs = load("paper_baseline")
     if recs:
         n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
@@ -448,6 +500,7 @@ def main() -> None:
     print("\n".join(serve_section()) + "\n")
     print("\n".join(adapt_section()) + "\n")
     print("\n".join(spec_section()) + "\n")
+    print("\n".join(tenant_section()) + "\n")
     recs = load(policy)
     n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
     n_na = sum(1 for r in recs.values() if r["status"] == "n/a")

@@ -1,0 +1,205 @@
+"""Multi-tenant mixed-traffic sweep: priority+EDF scheduling vs pure FIFO.
+
+Drives the continuous-batching engine (``repro.serve``) with a heterogeneous
+request mix — the traffic a real deployment of the paper's reconfigurable
+core actually sees — and compares the two scheduler policies on identical,
+seeded workloads:
+
+  * **interactive** tenant (priority 0, 2x entitlement): short ``chat``
+    turns with a tight step-unit deadline, plus ``audio`` requests with
+    Whisper-scale prompt lengths and a looser deadline;
+  * **bulk** tenant (priority 2): long ``batch`` decodes, no deadline —
+    submitted first so it saturates every slot before the urgent traffic
+    arrives (open-loop Poisson arrivals, measured in engine steps so the
+    whole sweep is machine-independent).
+
+Each (arch, policy) cell records per-tenant SLO attainment, latency
+percentiles, decode-slot share vs entitlement, preemption counts — and
+verifies every request's tokens are bit-identical to a solo run of the same
+prompt (the engines run unplanned NATIVE_F32, so exactness is exact).  The
+gate (``check_regression --tenant-new``) then asserts the semantic claims:
+all outputs exact, nobody starves, and the priority scheduler's
+high-priority attainment beats FIFO's on the same workload.
+
+    PYTHONPATH=src python -m benchmarks.tenant_sweep           # full sweep
+    PYTHONPATH=src python -m benchmarks.tenant_sweep --quick   # CI: one arch
+    PYTHONPATH=src python -m benchmarks.make_experiments_md --write
+
+Emits ``BENCH_tenant.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.serve_sweep import build_tiny
+from repro.serve import Request, ServeEngine
+from repro.serve.tenancy import RequestClass, Tenant, class_requests
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_tenant.json")
+
+ARCHS = ("qwen1.5-0.5b", "mamba2-2.7b")  # dense chat + SSM batch families
+SLOTS = 2
+MAX_LEN = 40
+HIGH_PRIORITY_TENANT = "interactive"
+
+TENANTS = [
+    Tenant("interactive", priority=0, share=2.0),
+    Tenant("bulk", priority=2, share=1.0),
+]
+CLASSES = [
+    RequestClass("chat", slo_steps=10, prompt_len=6, max_new=4),
+    RequestClass("audio", slo_steps=20, prompt_len=18, max_new=4),
+    RequestClass("batch", prompt_len=8, max_new=14),
+]
+#: (tenant, class, n requests, Poisson arrival rate in requests/step, first
+#: possible arrival step, rid base).  Bulk floods from step 0; the urgent
+#: streams arrive open-loop while every slot is already busy.
+STREAMS = [
+    ("bulk", "batch", 4, 2.0, 0, 0),
+    ("interactive", "chat", 3, 0.4, 2, 100),
+    ("interactive", "audio", 2, 0.25, 4, 200),
+]
+
+
+def build_workload(vocab: int, seed: int = 0):
+    """The per-step submission schedule: seeded Poisson arrivals measured
+    in *engine steps* (machine-independent), identical for every policy
+    cell of one arch."""
+    rng = np.random.default_rng(seed)
+    tenants = {t.name: t for t in TENANTS}
+    classes = {c.name: c for c in CLASSES}
+    arrivals: list[tuple[int, Request]] = []
+    for tname, cname, n, rate, start, rid_base in STREAMS:
+        reqs = class_requests(classes[cname], tenants[tname], n, vocab, rng,
+                              rid_base=rid_base)
+        t = float(start)
+        for r in reqs:
+            t += rng.exponential(1.0 / rate)
+            arrivals.append((int(t), r))
+    arrivals.sort(key=lambda a: (a[0], a[1].rid))
+    horizon = max(step for step, _ in arrivals) + 1
+    schedule: list[list[Request]] = [[] for _ in range(horizon)]
+    for step, r in arrivals:
+        schedule[step].append(r)
+    return schedule
+
+
+def solo_reference(model, params, schedule) -> dict[int, list[int]]:
+    """Every request served alone at batch_slots=1 — the exactness oracle
+    (one engine reused; rids offset to stay unique)."""
+    eng = ServeEngine(model, params, batch_slots=1, max_len=MAX_LEN)
+    out = {}
+    for step_reqs in schedule:
+        for r in step_reqs:
+            clone = Request(prompt=r.prompt, max_new=r.max_new,
+                            rid=r.rid + 10_000)
+            out[r.rid] = eng.generate_batch([clone])[clone.rid]
+    return out
+
+
+def run_cell(model, params, schedule, solo, policy: str) -> dict:
+    eng = ServeEngine(model, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                      tenants=TENANTS, classes=CLASSES,
+                      scheduler_policy=policy, aging_steps=8, min_quantum=1)
+    t0 = time.perf_counter()
+    for step_reqs in schedule:
+        for r in step_reqs:
+            eng.submit(r)
+        eng.step()
+    outs = eng.drain()
+    wall = time.perf_counter() - t0
+    s = eng.metrics.summary()
+    exact = {rid: outs.get(rid) == solo[rid] for rid in solo}
+    tenants = {
+        name: {
+            "submitted": t["submitted"],
+            "completed": t["completed"],
+            "tokens": t["tokens"],
+            "preemptions": t["preemptions"],
+            "classes": t["classes"],
+            "attainment": t["attainment"],
+            "latency_p50_s": (round(t["latency_p50_s"], 4)
+                              if t["latency_p50_s"] is not None else None),
+            "latency_p99_s": (round(t["latency_p99_s"], 4)
+                              if t["latency_p99_s"] is not None else None),
+            "slot_share": round(t["slot_share"], 3),
+            "entitlement": round(t["entitlement"], 3),
+        }
+        for name, t in s["tenants"].items() if t["submitted"]
+    }
+    return {
+        "policy": policy,
+        "slots": SLOTS,
+        "requests": s["requests"],
+        "completed": s["completed"],
+        "tokens_out": s["tokens_out"],
+        "tok_s": round(s["tok_s"], 2),
+        "wall_s": round(wall, 3),
+        "decode_steps": s["decode_steps"],
+        "engine_steps": eng.scheduler.clock,
+        "occupancy": round(s["occupancy"], 3),
+        "preemptions": s["preemptions"],
+        "max_wait_steps": eng.scheduler.max_wait_steps,
+        "all_exact": all(exact.values()),
+        "n_exact": sum(exact.values()),
+        "tenants": tenants,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one arch only (the CI gate configuration)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    archs = ARCHS[:1] if args.quick else ARCHS
+    cells = []
+    for arch in archs:
+        cfg, model, params = build_tiny(arch)
+        schedule = build_workload(cfg.vocab, args.seed)
+        solo = solo_reference(model, params, schedule)
+        for policy in ("fifo", "priority"):
+            cell = run_cell(model, params, schedule, solo, policy)
+            cell["arch"] = arch
+            cells.append(cell)
+            hp = cell["tenants"][HIGH_PRIORITY_TENANT]
+            att = (f"{hp['attainment']:.0%}"
+                   if hp["attainment"] is not None else "-")
+            print(f"{arch} {policy}: {cell['completed']}/{cell['requests']} "
+                  f"done, {HIGH_PRIORITY_TENANT} attainment {att}, "
+                  f"{cell['preemptions']} preemptions, "
+                  f"exact {cell['n_exact']}/{cell['requests']}")
+    doc = {
+        "host_backend": jax.default_backend(),
+        "slots": SLOTS,
+        "max_len": MAX_LEN,
+        "seed": args.seed,
+        "high_priority_tenant": HIGH_PRIORITY_TENANT,
+        "tenants": {t.name: {"priority": t.priority, "share": t.share}
+                    for t in TENANTS},
+        "classes": {c.name: {"slo_steps": c.slo_steps,
+                             "prompt_len": c.prompt_len,
+                             "max_new": c.max_new}
+                    for c in CLASSES},
+        "streams": [
+            {"tenant": tn, "class": cn, "n": n, "rate_per_step": rate,
+             "start_step": start}
+            for tn, cn, n, rate, start, _ in STREAMS
+        ],
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,12 @@ Pass ``--speculate`` (with ``--draft-k``, ``--draft-shift``) for
 self-speculative decoding (repro.spec): the cheap mode of the same step
 drafts, the exact baseline step verifies — outputs stay token-identical
 while expensive-mode steps per token drop below 1.
+
+Pass ``--multi-tenant`` for a canned two-tenant mix (an ``interactive``
+tenant with priority 0 and deadline-carrying chat requests vs a ``bulk``
+tenant flooding the slots with long batch decodes) under the priority+EDF
+scheduler with preemption, and a per-tenant fairness/SLO report at the end
+(``--scheduler-policy fifo`` shows the same traffic without priorities).
 """
 from __future__ import annotations
 
@@ -107,6 +113,12 @@ def main() -> None:
                     help="initial rungs below the verify modes for the "
                          "draft table (the acceptance controller retunes "
                          "it at run time)")
+    ap.add_argument("--multi-tenant", action="store_true",
+                    help="canned interactive-vs-bulk tenant mix under the "
+                         "priority scheduler, with a per-tenant SLO report")
+    ap.add_argument("--scheduler-policy", default="priority",
+                    choices=("priority", "fifo"),
+                    help="scheduler for --multi-tenant (default: priority)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -122,8 +134,25 @@ def main() -> None:
     params = model.init(jax.random.key(0))
 
     rng = np.random.default_rng(args.seed)
-    reqs = ragged_requests(args.requests, cfg.vocab, args.prompt_len,
-                           args.max_new, rng)
+    tenants = None
+    classes = None
+    if args.multi_tenant:
+        from repro.serve import RequestClass, Tenant, class_requests
+
+        tenants = [Tenant("interactive", priority=0, share=2.0),
+                   Tenant("bulk", priority=2, share=1.0)]
+        classes = [RequestClass("chat", slo_steps=10, prompt_len=6,
+                                max_new=max(args.max_new // 2, 2)),
+                   RequestClass("batch", prompt_len=args.prompt_len,
+                                max_new=args.max_new)]
+        n_bulk = max(args.requests // 2, 1)
+        reqs = class_requests(classes[1], tenants[1], n_bulk, cfg.vocab, rng)
+        reqs += class_requests(classes[0], tenants[0],
+                               max(args.requests - n_bulk, 1), cfg.vocab,
+                               rng, rid_base=100)
+    else:
+        reqs = ragged_requests(args.requests, cfg.vocab, args.prompt_len,
+                               args.max_new, rng)
     slots = args.slots or max(args.requests, 1)
     max_len = args.prompt_len + args.max_new + 8
     slo = None
@@ -143,6 +172,8 @@ def main() -> None:
         tune_table=args.tune_table or None,
         slo=slo, adapt_every=args.adapt_every,
         speculate=speculate,
+        tenants=tenants, classes=classes,
+        scheduler_policy=args.scheduler_policy,
     )
     t0 = time.perf_counter()
     outs = run_open_loop(eng, reqs, args.arrival_rate, rng)
@@ -163,6 +194,8 @@ def main() -> None:
     print(f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl compile; "
           f"kv={cfg.kv_cache_dtype}; slots={slots})")
     print(eng.metrics.format_summary())
+    if args.multi_tenant:
+        print(f"tenancy:\n{eng.describe_tenancy()}")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,28 @@
 """repro.serve — continuous-batching serving subsystem.
 
-    scheduler.py  admission queue + slot lifecycle (WAITING/PREFILL/DECODE/DONE)
-    engine.py     masked compiled step over the fixed slot array + streaming API
+    scheduler.py  admission + slot lifecycle (WAITING/PREFILL/DECODE/
+                  PREEMPTED/DONE): priority + earliest-deadline-first with
+                  aging and preemption, or pure FIFO (policy="fifo")
+    tenancy.py    Tenant / RequestClass — priority, entitlement share,
+                  per-tenant accuracy budget, step-unit deadlines
+    engine.py     masked compiled step over the fixed slot array + streaming
+                  API; preemption parks/resumes exact state rows
     metrics.py    tok/s, TTFT, latency, slot occupancy, plan-cache hits,
-                  speculative acceptance / verify-steps-per-token
+                  speculative acceptance, per-tenant SLO attainment /
+                  fairness (share vs entitlement)
 
 ``ServeEngine(slo=...)`` closes the runtime-precision loop (repro.adapt);
 ``ServeEngine(speculate=SpecConfig(...))`` runs self-speculative decode
-rounds (repro.spec).  See DESIGN.md sections Serving / Runtime adaptation /
-Speculative decoding for the slot-array layout and masking invariants.
+rounds (repro.spec); ``ServeEngine(tenants=[...], classes=[...])`` turns on
+multi-tenant priority scheduling (with ``slo=`` each tenant gets a private
+mode table + controller).  See DESIGN.md sections Serving / Runtime
+adaptation / Speculative decoding / Multi-tenant scheduling.
 """
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.metrics import ServeMetrics  # noqa: F401
 from repro.serve.scheduler import Request, Scheduler, ragged_requests  # noqa: F401
+from repro.serve.tenancy import (  # noqa: F401
+    RequestClass,
+    Tenant,
+    class_requests,
+)

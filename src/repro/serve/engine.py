@@ -47,8 +47,9 @@ import numpy as np
 from repro.models.lm import LanguageModel
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import Request, Scheduler, Ticket
+from repro.serve.tenancy import RequestClass, Tenant
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "RequestClass", "ServeEngine", "Tenant"]
 
 
 def _plan_phase(model: LanguageModel, tokens: int, accuracy: float,
@@ -119,7 +120,11 @@ class ServeEngine:
                  decode_accuracy_scale: float | None = None,
                  tune_table=None,
                  slo=None, adapt_every: int = 4, adapt: bool = True,
-                 controller=None, speculate=None):
+                 controller=None, speculate=None,
+                 tenants=None, classes=None,
+                 scheduler_policy: str = "priority",
+                 preempt: bool = True, aging_steps: int = 8,
+                 min_quantum: int = 2):
         """``slo`` (repro.adapt.SLO) turns on closed-loop runtime precision
         adaptation of the decode phase: the planner's decode modes become a
         mutable ModeTable whose int32 scalars feed one compiled masked step
@@ -137,6 +142,19 @@ class ServeEngine:
         round — outputs stay bit-identical to the non-speculative greedy
         engine while expensive-mode steps per emitted token drop below 1
         (DESIGN.md section Speculative decoding).  Requires ``greedy=True``.
+
+        ``tenants`` / ``classes`` (repro.serve.tenancy) declare the request
+        streams multiplexed onto the slot array: the scheduler admits by
+        (aged priority, deadline, seq) instead of FIFO, preempting running
+        low-priority work by *parking its exact state row* (gather, requeue,
+        scatter back at re-admission — never a re-prefill, so a preempted
+        request's token stream stays bit-identical to an uncontended run).
+        With ``slo=`` set, each tenant also gets its own ModeTable and
+        hysteresis controller (its ``accuracy`` overrides ``slo.max_err``)
+        so one tenant's hot workload cannot drag another tenant's modes;
+        each step binds the per-site *most precise* mode across tenants
+        with active slots.  ``scheduler_policy="fifo"`` restores the pure
+        submission-order baseline (the tenant sweep's comparison point).
         """
         if not greedy:
             # the masked step and the solo prefill take argmax; pretending
@@ -178,7 +196,15 @@ class ServeEngine:
         self.slots = batch_slots
         self.max_len = max_len
         self.greedy = greedy
-        self.scheduler = Scheduler(batch_slots, max_len)
+        self.scheduler = Scheduler(
+            batch_slots, max_len, tenants=tenants, classes=classes,
+            policy=scheduler_policy, preempt=preempt,
+            aging_steps=aging_steps, min_quantum=min_quantum)
+        self.metrics.set_tenant_shares(
+            {name: t.share for name, t in self.scheduler.tenants.items()})
+        #: rid -> parked per-slot state row (device pytree) of preempted
+        #: requests, scattered back verbatim at re-admission
+        self._parked: dict[int, object] = {}
         self.state = self.model_decode.init_decode_state(
             batch_slots, max_len, per_slot=True)
         # solo-prefill template: one per-slot row, reused for every prefill
@@ -188,6 +214,7 @@ class ServeEngine:
         self._prefill = jax.jit(self.model_prefill.decode_step)
         self._step = jax.jit(self._masked_step)
         self._scatter = jax.jit(self._scatter_slot)
+        self._gather = jax.jit(self._gather_slot)
         # host-side slot mirrors
         self._active = np.zeros((batch_slots,), bool)
         self._last_tok = np.zeros((batch_slots,), np.int32)
@@ -206,14 +233,42 @@ class ServeEngine:
             self._static_decode_label = self.phase_plans["decode"]["mlp_up"].mode.name
         else:
             self._static_decode_label = model.cfg.policy.default.name
+        #: per-tenant adaptation (tenants= with slo=): each tenant owns a
+        #: private ModeTable + controller; the compiled step binds the
+        #: per-site max across tenants with active slots (see
+        #: ``_bound_scalars``) so a tenant needing precision always gets at
+        #: least its own table's modes — isolation without a second compile
+        self.tenant_tables: dict[str, object] = {}
+        self.tenant_ctrl: dict[str, object] = {}
+        self._combined_cache: dict[tuple, dict] = {}
+        self._per_tenant_adapt = slo is not None and tenants is not None
         if slo is not None:
-            from repro.adapt import HysteresisController, ModeTable
+            from repro.adapt import SLO, HysteresisController, ModeTable
 
-            if self.phase_plans:
-                self.mode_table = ModeTable.from_plans(self.phase_plans["decode"])
+            def make_table():
+                if self.phase_plans:
+                    return ModeTable.from_plans(self.phase_plans["decode"])
+                return ModeTable.from_policy(model.cfg.policy)
+
+            if self._per_tenant_adapt:
+                if controller is not None:
+                    raise ValueError(
+                        "controller= is a single shared instance; with "
+                        "tenants= each tenant gets its own controller — "
+                        "set per-tenant budgets via Tenant.accuracy instead")
+                for name, ten in self.scheduler.tenants.items():
+                    t_slo = SLO(
+                        max_err=(ten.accuracy if ten.accuracy is not None
+                                 else slo.max_err),
+                        target_ms=slo.target_ms,
+                        down_factor=slo.down_factor)
+                    self.tenant_tables[name] = make_table()
+                    self.tenant_ctrl[name] = HysteresisController(t_slo)
+                self.mode_table = None
+                self.controller = None
             else:
-                self.mode_table = ModeTable.from_policy(model.cfg.policy)
-            self.controller = controller or HysteresisController(slo)
+                self.mode_table = make_table()
+                self.controller = controller or HysteresisController(slo)
             self.adapt_every = max(int(adapt_every), 1)
             self._step_modal = jax.jit(self._masked_step_modal)
             self._probe = jax.jit(self._probe_fn)
@@ -238,6 +293,16 @@ class ServeEngine:
         if not isinstance(spec, SpecConfig):
             raise TypeError(
                 f"speculate must be a repro.spec.SpecConfig, got {type(spec)}")
+        if self.tenant_tables:
+            # the speculative round binds ONE draft/verify table pair per
+            # compiled round; per-tenant tables would need per-slot mode
+            # binding inside the round — not built yet, so refuse loudly
+            # rather than silently verifying tenant A under tenant B's modes
+            raise NotImplementedError(
+                "speculate= with per-tenant adaptation (tenants= and slo=) "
+                "is not supported: the spec round verifies under one mode "
+                "table. Drop slo= (static speculation works with tenants=) "
+                "or drop speculate=.")
         self.spec = spec
         if self.mode_table is not None:
             self._spec_table = self.mode_table  # adaptive verify (slo path)
@@ -275,6 +340,16 @@ class ServeEngine:
             lambda ax, s, r: jax.lax.dynamic_update_slice_in_dim(
                 s, r.astype(s.dtype), slot, axis=ax),
             self._axes, state, solo,
+        )
+
+    def _gather_slot(self, state, slot):
+        """Read row ``slot`` of the engine state as a batch-1 per-slot state
+        (one ``dynamic_slice`` per leaf) — the preemption park.  The inverse
+        of ``_scatter_slot``: scatter(gather(state, s), s) is the identity,
+        which is why a preempted request resumes bit-identically."""
+        return jax.tree.map(
+            lambda ax, s: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=ax),
+            self._axes, state,
         )
 
     def _masked_step_modal(self, params, tokens, state, active, modes):
@@ -315,22 +390,35 @@ class ServeEngine:
         """Enqueue a request; it joins a slot on the next ``step()`` with
         free capacity.  Returns the rid."""
         rid = self.scheduler.submit(req)
-        self.metrics.on_submit(rid)
+        t = self.scheduler.tickets[rid]
+        rc = self.scheduler.classes[t.rclass]
+        self.metrics.on_submit(
+            rid, tenant=t.tenant, rclass=t.rclass,
+            slo_steps=rc.slo_steps, slo_ms=rc.slo_ms, step=t.submit_step)
         return rid
 
     def step(self) -> list[tuple[int, int]]:
-        """Admit waiting requests into free slots (one solo prefill each,
-        emitting the first token), then run one masked batched decode step
-        for every active slot.  Returns this step's (rid, token) events in
-        emission order."""
+        """One engine step: advance the scheduler clock, park any
+        preemption victims (exact state-row gather + requeue), admit
+        waiting requests into free slots (fresh: one solo prefill emitting
+        the first token; preempted: scatter the parked row back — no new
+        token, the request just continues), then run one masked batched
+        decode step for every active slot.  Returns this step's
+        (rid, token) events in emission order."""
         events: list[tuple[int, int]] = []
+        self.scheduler.tick()
+        for victim in self.scheduler.plan_preemptions():
+            self._park_slot(victim)
         for slot, ticket in self.scheduler.admit():
             if slot < 0:
                 # zero-budget admission (nothing fits the cache): the
                 # scheduler completed it without a slot — route the
                 # completion through metrics so summary()["completed"]
                 # agrees with drain()/scheduler.completed
-                self.metrics.on_done(ticket.rid)
+                self.metrics.on_done(ticket.rid, step=self.scheduler.clock)
+                continue
+            if ticket.tokens:
+                self._resume_slot(slot, ticket)
                 continue
             first = self._prefill_slot(slot, ticket)
             self.metrics.on_first_token(ticket.rid)
@@ -344,30 +432,93 @@ class ServeEngine:
             if (self.slo is not None
                     and self.metrics.decode_steps % self.adapt_every == 0
                     and self._active.any()):
-                self._adapt_tick()
+                if self._per_tenant_adapt:
+                    self._adapt_tick_tenants()
+                else:
+                    self._adapt_tick()
         return events
+
+    def _park_slot(self, victim: Ticket) -> None:
+        """Preempt a running request: gather its exact per-slot state row
+        off the device, free the slot, and requeue the ticket.  Nothing is
+        recomputed at resume — ``_resume_slot`` scatters this row back, so
+        the token stream continues bit-identically."""
+        slot = victim.slot
+        self._parked[victim.rid] = self._gather(self.state, jnp.int32(slot))
+        self._active[slot] = False
+        self.scheduler.preempt(victim.rid)
+        self.metrics.on_preempt(victim.rid)
+
+    def _resume_slot(self, slot: int, ticket: Ticket) -> None:
+        """Re-admit a preempted request: scatter its parked state row into
+        the (possibly different) slot and rearm the host mirrors.  No token
+        is emitted and no prefill runs — the next masked step continues
+        from ``ticket.tokens[-1]`` exactly as if the gap never happened."""
+        row = self._parked.pop(ticket.rid)
+        self.state = self._scatter(self.state, row, jnp.int32(slot))
+        self._active[slot] = True
+        self._last_tok[slot] = ticket.tokens[-1]
+
+    def _tenant_active(self) -> dict[str, int]:
+        """Active slots per tenant right now — metrics attribution for the
+        fairness report (share of decode-slot work actually consumed)."""
+        counts: dict[str, int] = {}
+        for slot in np.nonzero(self._active)[0]:
+            name = self.scheduler.by_slot[int(slot)].tenant
+            counts[name] = counts.get(name, 0) + 1
+        return counts
+
+    def _bound_scalars(self, tenant_active: dict[str, int]):
+        """(scalars, label) to bind this step under per-tenant adaptation:
+        the per-site *maximum* (most precise) mode across the tables of
+        tenants with active slots.  Each tenant therefore always runs at
+        least as precisely as its own table demands — its controller can
+        only see errors at or below what it asked for — while tables stay
+        isolated (a hot tenant shifting up never mutates a cold tenant's
+        table, and costs the cold tenant nothing once the hot tenant's
+        slots drain)."""
+        names = [n for n in tenant_active if n in self.tenant_tables]
+        if not names:  # no active slots: probe-only callers, bind any table
+            names = list(self.tenant_tables)
+        combined: dict[str, object] = {}
+        for n in names:
+            for site, m in self.tenant_tables[n].modes().items():
+                cur = combined.get(site)
+                if cur is None or int(m) > int(cur):
+                    combined[site] = m
+        key = tuple(sorted((s, int(m)) for s, m in combined.items()))
+        cached = self._combined_cache.get(key)
+        if cached is None:
+            cached = {s: jnp.asarray(int(m), jnp.int32)
+                      for s, m in combined.items()}
+            self._combined_cache[key] = cached
+        label_names = sorted({m.name for m in combined.values()})
+        label = (label_names[0] if len(label_names) == 1
+                 else "/".join(label_names))
+        return cached, label
 
     def _decode_step(self) -> list[tuple[int, int]]:
         """One masked batched decode step (the non-speculative path)."""
         events: list[tuple[int, int]] = []
         tokens = jnp.asarray(self._last_tok[:, None])
         active = jnp.asarray(self._active)
+        tenant_active = self._tenant_active()
         t0 = time.perf_counter()
         if self.slo is not None:
+            if self._per_tenant_adapt:
+                scalars, label = self._bound_scalars(tenant_active)
+            else:
+                scalars, label = self.mode_table.scalars(), self.mode_table.label()
             next_tok, self.state = self._step_modal(
-                self.params, tokens, self.state, active,
-                self.mode_table.scalars(),
-            )
+                self.params, tokens, self.state, active, scalars)
         else:
+            label = self._static_decode_label
             next_tok, self.state = self._step(
                 self.params, tokens, self.state, active)
         produced = np.asarray(next_tok)  # syncs the step
         self._last_step_ms = (time.perf_counter() - t0) * 1e3
         self.metrics.on_decode_step(
-            int(self._active.sum()),
-            mode=(self.mode_table.label() if self.mode_table is not None
-                  else self._static_decode_label),
-        )
+            int(self._active.sum()), mode=label, tenant_active=tenant_active)
         for slot in np.nonzero(self._active)[0]:
             ticket = self.scheduler.by_slot[int(slot)]
             tok = int(produced[slot])
@@ -399,6 +550,7 @@ class ServeEngine:
             n_active,
             mode=(self.mode_table.label() if self.mode_table is not None
                   else self._static_decode_label),
+            tenant_active=self._tenant_active(),
         )
         accepted = agreed = emitted = 0
         for slot in np.nonzero(active_np)[0]:
@@ -478,6 +630,41 @@ class ServeEngine:
             if table.shift_all(decision, tag=self.metrics.decode_steps):
                 self.metrics.on_mode_switch()
 
+    def _adapt_tick_tenants(self) -> None:
+        """One probe + controller observation *per tenant with active
+        slots*, each against that tenant's own table and masked to that
+        tenant's slots.  Isolation invariant (pinned by
+        tests/test_tenancy.py): tenant A's residuals never reach tenant
+        B's controller, so a hot workload shifting A's table up leaves B's
+        table exactly where B's own traffic put it."""
+        step_ms = self._last_step_ms
+        if step_ms is not None:
+            step_ms /= max(self._last_step_tokens, 1.0)
+        tokens = jnp.asarray(self._last_tok[:, None])
+        for name, table in self.tenant_tables.items():
+            mask = np.zeros_like(self._active)
+            for slot, t in self.scheduler.by_slot.items():
+                if t.tenant == name and self._active[slot]:
+                    mask[slot] = True
+            if not mask.any():
+                continue
+            ladder = int(table.max_mode) - int(table.min_mode)
+            err_cur, err_down = self._probe(
+                self.params, tokens, self.state, jnp.asarray(mask),
+                table.scalars(),
+                table.scalars_shifted(ladder),
+                table.scalars_shifted(-1),
+            )
+            err_cur, err_down = float(err_cur), float(err_down)
+            self.metrics.on_probe(err_cur)
+            decision = self.tenant_ctrl[name].observe(
+                self.metrics.decode_steps, err_cur, err_down,
+                step_ms=step_ms,
+                can_up=not table.at_max, can_down=not table.at_min)
+            if self._adapt and decision:
+                if table.shift_all(decision, tag=self.metrics.decode_steps):
+                    self.metrics.on_mode_switch()
+
     def drain(self) -> dict[int, list[int]]:
         """Step until queue and slots are empty; returns rid -> tokens for
         every request completed since construction."""
@@ -499,7 +686,7 @@ class ServeEngine:
         self.metrics.on_token(ticket.rid)
         if len(ticket.tokens) >= ticket.budget:
             self.scheduler.complete(ticket.rid)
-            self.metrics.on_done(ticket.rid)
+            self.metrics.on_done(ticket.rid, step=self.scheduler.clock)
             self._active[slot] = False
         else:
             self.scheduler.start_decode(ticket.rid)
@@ -552,7 +739,31 @@ class ServeEngine:
             + ctrl
         )
 
+    def describe_tenancy(self) -> str:
+        """Scheduler configuration + per-tenant fairness report."""
+        sch = self.scheduler
+        head = (
+            f"policy={sch.policy} aging_steps={sch.aging_steps} "
+            f"preempt={'on' if sch.preempt_enabled else 'off'} "
+            f"(min_quantum={sch.min_quantum}) | "
+            f"{len(sch.tenants)} tenants x {len(sch.classes)} classes | "
+            f"{sch.preemptions} preemptions, max wait {sch.max_wait_steps} "
+            f"steps"
+        )
+        body = self.metrics.format_tenants()
+        return head + ("\n" + body if body else "")
+
     def describe_adaptation(self) -> str:
+        if self.tenant_tables:
+            lines = []
+            for name in sorted(self.tenant_tables):
+                table = self.tenant_tables[name]
+                ctrl = self.tenant_ctrl[name]
+                lines.append(
+                    f"tenant {name}: table {table.describe()} | "
+                    f"{table.switches} switches ({ctrl.up_shifts} up / "
+                    f"{ctrl.down_shifts} down)")
+            return "per-tenant adaptation\n" + "\n".join(lines)
         if self.mode_table is None:
             return "adaptation off (no slo)"
         s = self.metrics.summary()

@@ -1,5 +1,5 @@
 """Serving metrics: throughput, TTFT, per-request latency, slot occupancy,
-plan-cache hits.
+plan-cache hits, per-tenant fairness and SLO attainment.
 
 ``ServeMetrics`` is pure bookkeeping — the engine calls the ``on_*`` hooks
 and ``summary()`` folds them into one dict.  Slot occupancy is measured over
@@ -7,6 +7,24 @@ and ``summary()`` folds them into one dict.  Slot occupancy is measured over
 ``occupancy = sum(active slots per step) / (decode steps * slots)`` — the
 fraction of the compiled step's rows doing useful work, the number that says
 whether continuous batching is actually keeping the array full.
+
+Multi-tenant accounting (DESIGN.md section Multi-tenant scheduling): every
+request carries its tenant / request-class tags plus the class's step-unit
+deadline, so ``tenant_summary()`` can report per tenant
+
+  * **SLO attainment** — fraction of this tenant's deadline-carrying
+    requests that completed within ``slo_steps`` *engine steps* of
+    submission (step units, not wall clock: the number the CI gate
+    compares between schedulers must not depend on host speed);
+  * **latency percentiles** — wall-clock p50/p99 submit-to-done and TTFT
+    (reporting only, never gated);
+  * **decode-slot share vs entitlement** — the fraction of (decode step x
+    active slot) pairs this tenant consumed, against its configured
+    ``share`` weight renormalized over tenants that actually submitted.
+
+TTFT is recorded once, at the request's *first* token: a preempted-then-
+resumed request must not get a second "first token" (resume restores state,
+it does not re-prefill), so ``on_first_token`` ignores repeats.
 
 Plan-cache numbers are deltas against the engine-construction snapshot, so
 they count only the planning this engine triggered (``repro.plan``
@@ -26,6 +44,22 @@ class RequestTimes:
     first_token: float | None = None
     done: float | None = None
     n_tokens: int = 0
+    tenant: str = "default"
+    rclass: str = "default"
+    slo_steps: int | None = None  # relative deadline in engine steps
+    slo_ms: float | None = None  # wall-clock target (reporting only)
+    submit_step: int | None = None
+    done_step: int | None = None
+    preemptions: int = 0
+
+
+def percentile(values: list[float], q: float) -> float | None:
+    """Nearest-rank percentile (q in [0, 100]); None on empty input."""
+    if not values:
+        return None
+    ordered = sorted(values)
+    rank = max(int(round(q / 100.0 * len(ordered) + 0.5)) - 1, 0)
+    return ordered[min(rank, len(ordered) - 1)]
 
 
 class ServeMetrics:
@@ -37,6 +71,10 @@ class ServeMetrics:
         self.prefills = 0
         self.decode_steps = 0
         self.active_slot_steps = 0  # sum over decode steps of active slots
+        self.preemptions = 0  # park/requeue events (resumes = preemptions)
+        # per-tenant (decode step x active slot) consumption + entitlement
+        self.tenant_slot_steps: dict[str, int] = {}
+        self.tenant_shares: dict[str, float] = {}  # configured entitlement
         # runtime-adaptation observability (repro.adapt): how many decode
         # steps ran under each mode label, every mode switch, every probe
         self.mode_steps: dict[str, int] = {}
@@ -67,10 +105,25 @@ class ServeMetrics:
         self._t_last_event = t
         return t
 
-    def on_submit(self, rid: int) -> None:
-        self.requests[rid] = RequestTimes(submit=self._mark())
+    def set_tenant_shares(self, shares: dict[str, float]) -> None:
+        """Configured entitlement weights (Tenant.share) for the fairness
+        report — set once by the engine at construction."""
+        self.tenant_shares = dict(shares)
+
+    def on_submit(self, rid: int, *, tenant: str = "default",
+                  rclass: str = "default", slo_steps: int | None = None,
+                  slo_ms: float | None = None,
+                  step: int | None = None) -> None:
+        self.requests[rid] = RequestTimes(
+            submit=self._mark(), tenant=tenant, rclass=rclass,
+            slo_steps=slo_steps, slo_ms=slo_ms, submit_step=step)
 
     def on_first_token(self, rid: int) -> None:
+        """First token of a request's life.  Repeats are ignored: a
+        preempted-then-resumed request already produced its first token, so
+        its TTFT must keep the original timestamp."""
+        if self.requests[rid].first_token is not None:
+            return
         self.prefills += 1
         self.requests[rid].first_token = self._mark()
 
@@ -78,9 +131,19 @@ class ServeMetrics:
         self.tokens_out += 1
         self.requests[rid].n_tokens += 1
 
-    def on_decode_step(self, n_active: int, mode: str | None = None) -> None:
+    def on_preempt(self, rid: int) -> None:
+        """One park/requeue of a running request (engine preemption path)."""
+        self.preemptions += 1
+        self.requests[rid].preemptions += 1
+
+    def on_decode_step(self, n_active: int, mode: str | None = None,
+                       tenant_active: dict[str, int] | None = None) -> None:
         self.decode_steps += 1
         self.active_slot_steps += n_active
+        if tenant_active:
+            for name, n in tenant_active.items():
+                self.tenant_slot_steps[name] = (
+                    self.tenant_slot_steps.get(name, 0) + n)
         if mode is not None:
             self.mode_steps[mode] = self.mode_steps.get(mode, 0) + 1
             if not self.mode_timeline or self.mode_timeline[-1][1] != mode:
@@ -112,8 +175,10 @@ class ServeMetrics:
         """One applied acceptance-controller move of the draft-mode shift."""
         self.draft_shift_timeline.append((round_idx, shift))
 
-    def on_done(self, rid: int) -> None:
-        self.requests[rid].done = self._mark()
+    def on_done(self, rid: int, step: int | None = None) -> None:
+        r = self.requests[rid]
+        r.done = self._mark()
+        r.done_step = step
 
     # -- derived -------------------------------------------------------------
 
@@ -170,6 +235,60 @@ class ServeMetrics:
             return {}
         return {m: n / total for m, n in sorted(self.mode_steps.items())}
 
+    def tenant_summary(self) -> dict[str, dict]:
+        """Per-tenant fairness / SLO view.  Tenants appear when they were
+        declared with a share or submitted at least one request; a tenant
+        with zero completed requests reports None percentiles and, if it
+        submitted deadline-carrying requests, an attainment of 0.0 (a
+        missed deadline is a miss, not a gap in the data).
+
+        ``attainment``: over this tenant's requests whose class carries
+        ``slo_steps``, the fraction completed within that many engine steps
+        of submission (None when the tenant has no deadline-carrying
+        requests).  ``slot_share``: measured fraction of decode (step x
+        active slot) pairs; ``entitlement``: the tenant's configured share
+        weight renormalized over tenants that submitted anything."""
+        names = sorted(set(self.tenant_shares)
+                       | {r.tenant for r in self.requests.values()})
+        submitted_names = {r.tenant for r in self.requests.values()}
+        ent_total = sum(self.tenant_shares.get(n, 1.0)
+                        for n in submitted_names) or 1.0
+        total_slot_steps = sum(self.tenant_slot_steps.values())
+        out: dict[str, dict] = {}
+        for name in names:
+            rs = [r for r in self.requests.values() if r.tenant == name]
+            lats = [r.done - r.submit for r in rs if r.done is not None]
+            ttfts = [r.first_token - r.submit for r in rs
+                     if r.first_token is not None]
+            with_slo = [r for r in rs if r.slo_steps is not None]
+            met = sum(
+                1 for r in with_slo
+                if r.done_step is not None and r.submit_step is not None
+                and r.done_step - r.submit_step <= r.slo_steps)
+            ms_targets = [r for r in rs if r.slo_ms is not None]
+            ms_met = sum(1 for r in ms_targets if r.done is not None
+                         and (r.done - r.submit) * 1e3 <= r.slo_ms)
+            out[name] = {
+                "submitted": len(rs),
+                "completed": sum(1 for r in rs if r.done is not None),
+                "tokens": sum(r.n_tokens for r in rs),
+                "preemptions": sum(r.preemptions for r in rs),
+                "classes": sorted({r.rclass for r in rs}),
+                "attainment": (met / len(with_slo)) if with_slo else None,
+                "attainment_ms": (ms_met / len(ms_targets)
+                                  if ms_targets else None),
+                "latency_p50_s": percentile(lats, 50),
+                "latency_p99_s": percentile(lats, 99),
+                "ttft_p50_s": percentile(ttfts, 50),
+                "slot_share": (
+                    self.tenant_slot_steps.get(name, 0) / total_slot_steps
+                    if total_slot_steps else 0.0),
+                "entitlement": (
+                    self.tenant_shares.get(name, 1.0) / ent_total
+                    if name in submitted_names else 0.0),
+            }
+        return out
+
     def plan_cache_delta(self) -> dict:
         snap = plan_cache_stats()
         return {
@@ -195,6 +314,8 @@ class ServeMetrics:
             "latency_mean_s": sum(lats) / len(lats) if lats else None,
             "decode_steps": self.decode_steps,
             "occupancy": self.occupancy,
+            "preemptions": self.preemptions,
+            "tenants": self.tenant_summary(),
             "mode_switches": self.mode_switches,
             "mode_occupancy": self.mode_occupancy,
             "probe_err_max": (max(e for _, e in self.probe_errs)
@@ -224,6 +345,8 @@ class ServeMetrics:
             f"| occupancy {s['occupancy']:.2f} over {s['decode_steps']} steps "
             f"| plan cache +{pc['misses']} plans / {pc['hits']} hits"
         )
+        if s["preemptions"]:
+            out += f" | {s['preemptions']} preemptions"
         if s["mode_occupancy"]:
             occ = " ".join(f"{m}:{f:.2f}" for m, f in s["mode_occupancy"].items())
             out += f" | modes {occ} ({s['mode_switches']} switches)"
@@ -236,3 +359,22 @@ class ServeMetrics:
                     f"{s['verify_steps_per_token']:.2f}"
                     f" ({s['draft_shift_moves']} draft-shift moves)")
         return out
+
+    def format_tenants(self) -> str:
+        """One line per tenant: the fairness / attainment report."""
+        rows = []
+        for name, t in self.tenant_summary().items():
+            att = (f"{t['attainment']:.0%}" if t["attainment"] is not None
+                   else "-")
+            p50 = (f"{t['latency_p50_s']*1e3:.0f}ms"
+                   if t["latency_p50_s"] is not None else "-")
+            p99 = (f"{t['latency_p99_s']*1e3:.0f}ms"
+                   if t["latency_p99_s"] is not None else "-")
+            rows.append(
+                f"tenant {name}: {t['completed']}/{t['submitted']} done "
+                f"({','.join(t['classes']) or '-'}) | attainment {att} "
+                f"| p50 {p50} p99 {p99} | share {t['slot_share']:.2f} "
+                f"(entitled {t['entitlement']:.2f}) "
+                f"| {t['preemptions']} preemptions"
+            )
+        return "\n".join(rows)

@@ -1,0 +1,294 @@
+"""Multi-tenant serving: differential bit-identity vs solo runs (dense /
+ssm / hybrid, with speculation, under forced preemption), per-tenant adapt
+isolation, ServeMetrics per-tenant edge cases, and engine/scheduler
+agreement under preemption.
+
+The scheduling-contract invariants themselves live in
+tests/test_scheduler_model.py (model-free); this module is the engine half
+of the harness: real models, real state parking, real tokens.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from scheduler_model import check_slot_accounting
+from repro.adapt import SLO
+from repro.adapt.workload import conditioned_model
+from repro.configs import get_smoke_config
+from repro.core.policy import NATIVE_F32
+from repro.core.precision import Mode
+from repro.models import build_model
+from repro.serve import Request, ServeEngine
+from repro.serve.metrics import ServeMetrics
+from repro.serve.tenancy import (RequestClass, Tenant, class_requests,
+                                 normalize_classes, normalize_tenants)
+from repro.spec import SpecConfig
+
+TENANTS = [
+    Tenant("interactive", priority=0, share=2.0),
+    Tenant("bulk", priority=2, share=1.0),
+]
+CLASSES = [
+    RequestClass("chat", slo_steps=8, prompt_len=6, max_new=5),
+    RequestClass("batch", prompt_len=8, max_new=12),
+]
+
+
+def _tiny(arch="qwen1.5-0.5b", n_layers=2, seed=0, **over):
+    cfg = get_smoke_config(arch).with_policy(NATIVE_F32)
+    cfg = dataclasses.replace(cfg, n_layers=n_layers, **over)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(seed))
+    return cfg, model, params
+
+
+def _mixed_requests(vocab, rng):
+    """3 bulk/batch + 2 interactive/chat — bulk submitted first so it
+    saturates the slots before the urgent traffic arrives."""
+    bulk = class_requests(CLASSES[1], TENANTS[1], 3, vocab, rng, rid_base=0)
+    chat = class_requests(CLASSES[0], TENANTS[0], 2, vocab, rng, rid_base=10)
+    return bulk, chat
+
+
+def _contended_drain(eng, bulk, chat, warmup=3):
+    """Fill the slots with bulk, let it run ``warmup`` steps, then drop the
+    urgent chat traffic on top and drain."""
+    for r in bulk:
+        eng.submit(r)
+    for _ in range(warmup):
+        eng.step()
+    for r in chat:
+        eng.submit(r)
+    out = eng.drain()
+    check_slot_accounting(eng.scheduler)
+    return out
+
+
+def _solo_outputs(model, params, reqs, max_len=32):
+    """Each request served alone at batch_slots=1 — the bit-identity
+    reference (one engine reused; rids offset to keep them unique)."""
+    eng = ServeEngine(model, params, batch_slots=1, max_len=max_len)
+    out = {}
+    for r in reqs:
+        clone = Request(prompt=r.prompt, max_new=r.max_new, rid=r.rid + 1000)
+        out[r.rid] = eng.generate_batch([clone])[clone.rid]
+    return out
+
+
+class TestDifferentialExactness:
+    """ISSUE 6 acceptance: every request's tokens under multi-tenant
+    scheduling — including preempted-and-resumed ones — are bit-identical
+    to the same request served alone."""
+
+    @pytest.mark.parametrize(
+        "arch", ["qwen1.5-0.5b", "mamba2-2.7b", "recurrentgemma-9b"])
+    def test_families_exact_under_preemption(self, arch):
+        cfg, model, params = _tiny(arch)
+        rng = np.random.default_rng(2)
+        bulk, chat = _mixed_requests(cfg.vocab, rng)
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32,
+                          tenants=TENANTS, classes=CLASSES,
+                          aging_steps=4, min_quantum=1)
+        out = _contended_drain(eng, bulk, chat)
+        # contention is real: at least one bulk request was parked/resumed
+        assert eng.scheduler.preemptions >= 1
+        solo = _solo_outputs(model, params, bulk + chat)
+        for r in bulk + chat:
+            assert out[r.rid] == solo[r.rid], f"{arch} rid {r.rid}"
+
+    def test_exact_with_speculation(self):
+        # speculate= + tenants= (static verify table): preempted/resumed
+        # slots must roll back and park consistently inside spec rounds
+        cfg, model, params = _tiny()
+        rng = np.random.default_rng(3)
+        bulk, chat = _mixed_requests(cfg.vocab, rng)
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32,
+                          tenants=TENANTS, classes=CLASSES,
+                          aging_steps=4, min_quantum=1,
+                          speculate=SpecConfig(k=2, draft_shift=1))
+        out = _contended_drain(eng, bulk, chat)
+        assert eng.scheduler.preemptions >= 1
+        solo = _solo_outputs(model, params, bulk + chat)
+        for r in bulk + chat:
+            assert out[r.rid] == solo[r.rid], f"rid {r.rid}"
+
+    def test_fifo_policy_also_exact(self):
+        # the baseline arm of the tenant sweep: same workload, no
+        # reordering, still bit-identical per request
+        cfg, model, params = _tiny()
+        rng = np.random.default_rng(4)
+        bulk, chat = _mixed_requests(cfg.vocab, rng)
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32,
+                          tenants=TENANTS, classes=CLASSES,
+                          scheduler_policy="fifo")
+        out = _contended_drain(eng, bulk, chat)
+        assert eng.scheduler.preemptions == 0
+        solo = _solo_outputs(model, params, bulk + chat)
+        for r in bulk + chat:
+            assert out[r.rid] == solo[r.rid], f"rid {r.rid}"
+
+    def test_forced_preemption_roundtrip_exact(self):
+        # minimal single-slot park/resume: one long bulk request preempted
+        # by an urgent one must resume from its parked row and finish with
+        # exactly its solo token stream (no re-prefill, no drift)
+        cfg, model, params = _tiny()
+        rng = np.random.default_rng(5)
+        long = Request(prompt=rng.integers(0, cfg.vocab, 6).astype(np.int32),
+                       max_new=10, rid=0, tenant="bulk", rclass="batch")
+        urgent = Request(prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                         max_new=3, rid=1, tenant="interactive", rclass="chat")
+        eng = ServeEngine(model, params, batch_slots=1, max_len=32,
+                          tenants=TENANTS, classes=CLASSES, min_quantum=1)
+        eng.submit(long)
+        for _ in range(3):
+            eng.step()
+        eng.submit(urgent)
+        out = eng.drain()
+        assert eng.scheduler.tickets[0].preemptions >= 1
+        solo = _solo_outputs(model, params, [long, urgent])
+        assert out[0] == solo[0]
+        assert out[1] == solo[1]
+
+
+class TestPerTenantAdaptIsolation:
+    """One tenant's hot workload must not drag another tenant's mode
+    table: each tenant owns a private table + controller, probed only on
+    its own slots."""
+
+    def test_hot_tenant_shifts_cold_tenant_holds(self):
+        wl = conditioned_model()
+        rng = np.random.default_rng(0)
+        tenants = [Tenant("hot", priority=1), Tenant("cold", priority=1)]
+        eng = ServeEngine(wl.model, wl.params, batch_slots=4, max_len=48,
+                          slo=SLO(max_err=0.5), adapt_every=1,
+                          tenants=tenants)
+        assert eng.mode_table is None  # per-tenant mode: no shared table
+        hot = wl.requests(4, hot={0, 1, 2, 3}, rng=rng, max_new=12)
+        cold = wl.requests(4, hot=set(), rng=rng, max_new=12)
+        for r in hot:
+            eng.submit(dataclasses.replace(r, tenant="hot"))
+        for r in cold:
+            eng.submit(dataclasses.replace(r, rid=r.rid + 100, tenant="cold"))
+        eng.drain()
+        assert eng.tenant_ctrl["hot"].up_shifts >= 1
+        assert int(Mode[eng.tenant_tables["hot"].label()]) > int(Mode.M8)
+        # isolation: the cold tenant's controller never saw the hot
+        # residuals, so its table never moved
+        assert eng.tenant_ctrl["cold"].up_shifts == 0
+        assert eng.tenant_tables["cold"].label() == "M8"
+        # one compiled step serves every table combination
+        assert eng.decode_compile_count == 1
+        assert "per-tenant" in eng.describe_adaptation()
+
+    def test_speculate_with_per_tenant_adapt_refused(self):
+        wl = conditioned_model()
+        with pytest.raises(NotImplementedError, match="per-tenant"):
+            ServeEngine(wl.model, wl.params, batch_slots=2, max_len=32,
+                        slo=SLO(max_err=0.5), tenants=[Tenant("a")],
+                        speculate=SpecConfig(k=2, draft_shift=1))
+
+    def test_shared_controller_with_tenants_refused(self):
+        from repro.adapt import HysteresisController
+
+        wl = conditioned_model()
+        with pytest.raises(ValueError, match="per-tenant"):
+            ServeEngine(wl.model, wl.params, batch_slots=2, max_len=32,
+                        slo=SLO(max_err=0.5), tenants=[Tenant("a")],
+                        controller=HysteresisController(SLO(max_err=0.5)))
+
+
+class TestMetricsEdgeCases:
+    """Satellite: ServeMetrics per-tenant accounting corners."""
+
+    def test_zero_completed_tenant(self):
+        m = ServeMetrics(slots=2)
+        m.set_tenant_shares({"a": 2.0, "b": 1.0, "idle": 1.0})
+        m.on_submit(0, tenant="a", rclass="chat", slo_steps=4, step=0)
+        m.on_first_token(0)
+        m.on_token(0)
+        m.on_decode_step(1, tenant_active={"a": 1})
+        # tenant "b" submitted but completed nothing; "idle" never submitted
+        m.on_submit(1, tenant="b", rclass="chat", slo_steps=4, step=0)
+        ts = m.tenant_summary()
+        assert ts["b"]["completed"] == 0
+        assert ts["b"]["latency_p50_s"] is None
+        assert ts["b"]["latency_p99_s"] is None
+        # deadline-carrying but unfinished: a miss, not missing data
+        assert ts["b"]["attainment"] == 0.0
+        assert ts["idle"]["submitted"] == 0
+        assert ts["idle"]["attainment"] is None
+        assert ts["idle"]["entitlement"] == 0.0  # never submitted: no claim
+        # entitlement renormalizes over submitting tenants only
+        assert ts["a"]["entitlement"] == pytest.approx(2 / 3)
+        assert ts["a"]["slot_share"] == 1.0
+
+    def test_preempted_ttft_is_recorded_once(self):
+        t = [0.0]
+
+        def clock():
+            t[0] += 1.0
+            return t[0]
+
+        m = ServeMetrics(slots=1, clock=clock)
+        m.on_submit(0, tenant="a", step=0)
+        m.on_first_token(0)
+        first = m.ttft(0)
+        m.on_preempt(0)
+        # a resume must NOT look like a second first token; guard ignores it
+        m.on_first_token(0)
+        assert m.ttft(0) == first
+        assert m.prefills == 1
+        assert m.requests[0].preemptions == 1
+        m.on_done(0, step=7)
+        assert m.latency(0) is not None
+
+    def test_engine_metrics_agree_with_scheduler_under_preemption(self):
+        cfg, model, params = _tiny()
+        rng = np.random.default_rng(6)
+        bulk, chat = _mixed_requests(cfg.vocab, rng)
+        eng = ServeEngine(model, params, batch_slots=2, max_len=32,
+                          tenants=TENANTS, classes=CLASSES,
+                          aging_steps=4, min_quantum=1)
+        out = _contended_drain(eng, bulk, chat)
+        assert eng.scheduler.preemptions >= 1
+        s = eng.metrics.summary()
+        assert s["completed"] == len(eng.scheduler.completed) == len(out)
+        assert s["preemptions"] == eng.scheduler.preemptions
+        assert s["tokens_out"] == sum(len(v) for v in out.values())
+        ts = s["tenants"]
+        assert ts["bulk"]["preemptions"] == eng.scheduler.preemptions
+        assert ts["interactive"]["preemptions"] == 0
+        # every request prefilled exactly once (resumes don't re-prefill)
+        assert eng.metrics.prefills == len(out)
+        # slot-share accounting balances to 1 across tenants that decoded
+        total_share = sum(v["slot_share"] for v in ts.values())
+        assert total_share == pytest.approx(1.0)
+        # attainment exists for the deadline-carrying class only
+        assert ts["interactive"]["attainment"] is not None
+        assert ts["bulk"]["attainment"] is None
+        assert "interactive" in eng.describe_tenancy()
+
+    def test_tenant_registry_validation(self):
+        cfg, model, params = _tiny()
+        eng = ServeEngine(model, params, batch_slots=1, max_len=32,
+                          tenants=TENANTS, classes=CLASSES)
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+        with pytest.raises(ValueError, match="unknown tenant"):
+            eng.submit(Request(prompt=prompt, rid=0, tenant="nope"))
+        with pytest.raises(ValueError, match="unknown request class"):
+            eng.submit(Request(prompt=prompt, rid=0, tenant="bulk",
+                               rclass="nope"))
+
+    def test_normalize_helpers_and_validation(self):
+        reg = normalize_tenants(TENANTS)
+        assert set(reg) == {"interactive", "bulk", "default"}
+        assert normalize_classes(None) == {"default": RequestClass("default")}
+        with pytest.raises(ValueError, match="share"):
+            Tenant("x", share=0)
+        with pytest.raises(ValueError, match="slo_steps"):
+            RequestClass("x", slo_steps=0)
+        with pytest.raises(TypeError):
+            normalize_tenants([RequestClass("x")])
