@@ -264,6 +264,74 @@ def spec_semantics(doc: dict) -> list[str]:
     return problems
 
 
+def tile_semantics(doc: dict) -> list[str]:
+    """Machine-independent invariants of a fresh BENCH_tile.json — the
+    partitioned-SIMD kernel's contract, never a wall-clock ratio:
+
+      * every uniform-map cell is BIT-identical to ``mp_matmul`` on the
+        ``impl='pallas'`` switch-branch kernel at the same blocks;
+      * the runtime tile path traces to 0 ``lax.switch`` equations and
+        exactly 1 fused ``pallas_call`` (the switch path must show >= 1
+        switch, or the comparison is vacuous), stays bit-identical to the
+        switch path at every mode value, and compiles exactly once across
+        all mode values (zero-recompile reconfiguration);
+      * every magnitude cell meets its error budget, uses >= 2 distinct
+        modes (one mode means the outlier workload isn't exercising the
+        map), and its per-tile MXU pass count is strictly below the
+        uniform-max cost the switch path would pay (``pass_ratio < 1``).
+
+    Returns a list of violation strings (empty = pass).
+    """
+    problems = []
+    cells = doc.get("cells", [])
+    if not cells:
+        return ["no tile cells found"]
+    kinds = {c.get("kind") for c in cells}
+    for want in ("uniform", "runtime", "magnitude"):
+        if want not in kinds:
+            problems.append(f"no {want} cells found")
+    for c in cells:
+        kind = c.get("kind")
+        if kind == "uniform":
+            key = f"uniform n={c.get('n')} {c.get('mode')}"
+            if not c.get("bitwise_equal"):
+                problems.append(f"{key}: tile output not bitwise-equal to "
+                                "the pallas switch-branch kernel")
+        elif kind == "runtime":
+            key = f"runtime n={c.get('n')}"
+            if not c.get("modes_equal_switch"):
+                problems.append(
+                    f"{key}: tile output diverged from the switch path")
+            if c.get("tile_switches") != 0 or c.get("tile_pallas_calls") != 1:
+                problems.append(
+                    f"{key}: tile path traced {c.get('tile_switches')} "
+                    f"switches x {c.get('tile_pallas_calls')} pallas calls "
+                    "(want 0 x 1: one fused dispatch)")
+            if c.get("switch_switches", 0) < 1:
+                problems.append(
+                    f"{key}: switch path shows no lax.switch — the "
+                    "comparison is vacuous")
+            if c.get("tile_compile_count") != 1:
+                problems.append(
+                    f"{key}: {c.get('tile_compile_count')} compiled "
+                    "executables across mode values (mode changes retrace)")
+        elif kind == "magnitude":
+            key = f"magnitude n={c.get('n')}"
+            if not c.get("budget_met"):
+                problems.append(
+                    f"{key}: error {c.get('rel_err_vs_envelope')} over "
+                    f"budget {c.get('budget')}")
+            if c.get("modes_used", 0) < 2:
+                problems.append(
+                    f"{key}: magnitude map used {c.get('modes_used')} mode "
+                    "(outlier workload not exercising the map)")
+            if not c.get("pass_ratio", 1.0) < 1.0:
+                problems.append(
+                    f"{key}: pass_ratio {c.get('pass_ratio')} not below the "
+                    "uniform-max cost")
+    return problems
+
+
 def compare(
     baseline: dict[tuple, float],
     new: dict[tuple, float],
@@ -367,6 +435,14 @@ def main(argv: list[str] | None = None) -> int:
         "strictly better somewhere, real preemption)",
     )
     ap.add_argument(
+        "--tile-new",
+        default="",
+        help="fresh BENCH_tile.json; checked for the machine-independent "
+        "partitioned-SIMD invariants (uniform maps bitwise-equal to the "
+        "pallas kernel, one fused dispatch with zero switches and zero "
+        "recompiles, magnitude maps inside budget with pass_ratio < 1)",
+    )
+    ap.add_argument(
         "--adapt-strict",
         action="store_true",
         help="also fail on the adapted-vs-safe throughput invariant "
@@ -433,6 +509,16 @@ def main(argv: list[str] | None = None) -> int:
         if not problems:
             print("tenant (semantics): ok (outputs exact, no starvation, "
                   "priority attainment beats FIFO, preemption exercised)")
+        ok &= not problems
+    if args.tile_new:
+        ran = True
+        problems = tile_semantics(load(args.tile_new))
+        for p in problems:
+            print(f"tile (semantics): FAIL {p}")
+        if not problems:
+            print("tile (semantics): ok (uniform maps bitwise-equal, one "
+                  "fused dispatch with zero switches/recompiles, magnitude "
+                  "maps inside budget at pass_ratio < 1)")
         ok &= not problems
     if args.spec_new:
         ran = True

@@ -2,7 +2,8 @@
 BENCH_plan.json (benchmarks/plan_sweep.py), the tuner's measured-vs-modeled
 comparison from BENCH_tune.json (benchmarks/tune_sweep.py), the serve sweep
 from BENCH_serve.json (benchmarks/serve_sweep.py), the runtime-adaptation
-sweep from BENCH_adapt.json (benchmarks/adapt_sweep.py) and, when present,
+sweep from BENCH_adapt.json (benchmarks/adapt_sweep.py), the tile-kernel
+sweep from BENCH_tile.json (benchmarks/tile_sweep.py) and, when present,
 the dry-run + roofline tables from experiments/dryrun/*.json.
 
     PYTHONPATH=src python -m benchmarks.plan_sweep          # produce BENCH_plan.json
@@ -27,6 +28,7 @@ BENCH_SERVE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 BENCH_ADAPT = os.path.join(os.path.dirname(__file__), "..", "BENCH_adapt.json")
 BENCH_SPEC = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
 BENCH_TENANT = os.path.join(os.path.dirname(__file__), "..", "BENCH_tenant.json")
+BENCH_TILE = os.path.join(os.path.dirname(__file__), "..", "BENCH_tile.json")
 EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
 BEGIN_MARK = "<!-- BEGIN GENERATED (benchmarks/make_experiments_md.py) -->"
 END_MARK = "<!-- END GENERATED -->"
@@ -400,6 +402,71 @@ def tenant_section() -> list[str]:
     ]
 
 
+def load_bench_tile(path: str = BENCH_TILE) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def tile_table(doc: dict) -> list[str]:
+    out = ["| n | cell | detail | dispatch | cost | tile wall | ref wall |",
+           "|---|---|---|---|---|---|---|"]
+    for c in doc.get("cells", []):
+        if c["kind"] == "uniform":
+            eq = "bitwise" if c["bitwise_equal"] else "**diverged**"
+            out.append(
+                f"| {c['n']} | uniform {c['mode']} | {eq} vs pallas | 1 fused "
+                f"| = | {fmt_s(c['tile_wall_us'] * 1e-6)} "
+                f"| {fmt_s(c['pallas_wall_us'] * 1e-6)} |"
+            )
+        elif c["kind"] == "runtime":
+            eq = "bitwise" if c["modes_equal_switch"] else "**diverged**"
+            disp = (f"{c['tile_pallas_calls']} fused / "
+                    f"{c['tile_switches']} switch "
+                    f"(vs {c['switch_switches']}x"
+                    f"{c['switch_pallas_calls']} branches)")
+            out.append(
+                f"| {c['n']} | runtime mode | {eq}, "
+                f"compile x{c['tile_compile_count']} | {disp} | = "
+                f"| {fmt_s(c['tile_wall_us'] * 1e-6)} "
+                f"| {fmt_s(c['switch_wall_us'] * 1e-6)} |"
+            )
+        elif c["kind"] == "magnitude":
+            hist = " ".join(f"{m}:{n}" for m, n in c["mode_histogram"].items())
+            met = "yes" if c["budget_met"] else "**no**"
+            out.append(
+                f"| {c['n']} | magnitude map | {hist}, "
+                f"err/S={c['rel_err_vs_envelope']:.1e} (met: {met}) "
+                f"| 1 fused | passes x{c['pass_ratio']:.2f} "
+                f"| {fmt_s(c['tile_wall_us'] * 1e-6)} "
+                f"| {fmt_s(c['uniform_max_wall_us'] * 1e-6)} |"
+            )
+    return out
+
+
+def tile_section() -> list[str]:
+    doc = load_bench_tile()
+    if doc is None:
+        return ["### Tile sweep\n",
+                "_BENCH_tile.json not found — run "
+                "`python -m benchmarks.tile_sweep` first._\n"]
+    blk = "x".join(str(x) for x in doc.get("block", []))
+    return [
+        f"### Tile sweep (BENCH_tile.json, host={doc['host_backend']}, "
+        f"block={blk}, budget={doc['budget']:.1e})\n",
+        "Partitioned-SIMD tile kernel (`repro.kernels.tile_matmul`): one "
+        "fused dispatch reads a per-tile mode map instead of branching "
+        "through `lax.switch` — uniform maps stay bitwise-equal to the "
+        "pallas kernel, runtime mode changes hit one compiled executable, "
+        "and the magnitude map spends expensive limbs only on hot tiles "
+        "(`cost` = MXU passes vs uniform-max; ref wall = the switch-path / "
+        "forced-expensive equivalent):\n",
+        "\n".join(tile_table(doc)),
+        "",
+    ]
+
+
 def generated_sections() -> str:
     parts: list[str] = []
     doc = load_bench_plan()
@@ -426,6 +493,7 @@ def generated_sections() -> str:
     parts.extend(adapt_section())
     parts.extend(spec_section())
     parts.extend(tenant_section())
+    parts.extend(tile_section())
     recs = load("paper_baseline")
     if recs:
         n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
@@ -501,6 +569,7 @@ def main() -> None:
     print("\n".join(adapt_section()) + "\n")
     print("\n".join(spec_section()) + "\n")
     print("\n".join(tenant_section()) + "\n")
+    print("\n".join(tile_section()) + "\n")
     recs = load(policy)
     n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
     n_na = sum(1 for r in recs.values() if r["status"] == "n/a")

@@ -1,0 +1,222 @@
+"""Tile-kernel sweep: the partitioned-SIMD path vs the switch path
+(EXPERIMENTS.md section Tile sweep is generated from this output).
+
+Three cell kinds per shape:
+
+  * **uniform** — one cell per f32-ladder mode: the tile kernel under a
+    uniform map must be BIT-identical to ``mp_matmul(impl='pallas')`` at the
+    same blocks (the exactness contract), with wall time for both.
+  * **runtime** — the zero-recompile dispatch comparison: the tile path must
+    trace to 0 ``lax.switch`` equations and exactly 1 fused ``pallas_call``
+    where the switch path traces N branches; one compiled executable across
+    every mode value; median step wall both ways.
+  * **magnitude** — an outlier-heavy workload (background tiles ~1e-3 of the
+    hot tile): the magnitude map must use >= 2 distinct modes, stay inside
+    its error budget, and cut MXU passes vs forcing the whole matmul to the
+    expensive mode (``pass_ratio`` — the machine-independent cost win; wall
+    time recorded alongside).
+
+Wall times are CPU-interpret-mode numbers on CI — machine-local, trend-only;
+every gate in ``check_regression --tile-new`` is machine-independent.
+
+    PYTHONPATH=src python -m benchmarks.tile_sweep            # full sweep
+    PYTHONPATH=src python -m benchmarks.tile_sweep --quick    # CI-sized
+
+Emits ``BENCH_tile.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import F32_MODES, MODE_LIMBS, Mode
+from repro.core.rmpm import mp_matmul, mp_matmul_runtime
+from repro.kernels.tile_matmul.ops import tile_grid, tile_matmul_auto
+from repro.kernels.tile_matmul.tile_policy import dispatch_stats, magnitude_map
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_tile.json")
+
+SIZES = (128, 256)
+QUICK_SIZES = (128,)
+BLOCK = (64, 64, 64)
+BUDGET = 2.0**-12
+
+
+def _wall_us(fn, *args, iters: int) -> float:
+    jax.block_until_ready(fn(*args))  # compile/warm
+    ts = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _operands(rng, n: int, outlier: bool = False):
+    a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    if outlier:
+        # background rows 1e-3 of the hot row-tile: the switch path would
+        # pay the expensive mode everywhere for the sake of one tile
+        a = (a * 1e-3).at[: BLOCK[0]].set(a[: BLOCK[0]])
+    return a, b
+
+
+def uniform_cells(rng, n: int, iters: int) -> list[dict]:
+    a, b = _operands(rng, n)
+    cells = []
+    for mode in F32_MODES:
+        def tile(a_, b_, mode=mode):
+            return mp_matmul(a_, b_, mode, impl="tile", block=BLOCK)
+
+        def pallas(a_, b_, mode=mode):
+            return mp_matmul(a_, b_, mode, impl="pallas", block=BLOCK)
+
+        t_out = np.asarray(tile(a, b))
+        p_out = np.asarray(pallas(a, b))
+        cells.append({
+            "kind": "uniform",
+            "n": n,
+            "mode": mode.name,
+            "bitwise_equal": bool((t_out == p_out).all()),
+            "tile_wall_us": round(_wall_us(jax.jit(tile), a, b, iters=iters), 1),
+            "pallas_wall_us": round(_wall_us(jax.jit(pallas), a, b, iters=iters), 1),
+        })
+    return cells
+
+
+def runtime_cell(rng, n: int, iters: int) -> dict:
+    a, b = _operands(rng, n)
+
+    def tile_fn(a_, b_, s):
+        return mp_matmul_runtime(a_, b_, s, impl="tile", block=BLOCK,
+                                 allow_auto=False)
+
+    def switch_fn(a_, b_, s):
+        return mp_matmul_runtime(a_, b_, s, impl="pallas", block=BLOCK,
+                                 allow_auto=False)
+
+    t_stats = dispatch_stats(tile_fn, a, b, jnp.int32(2))
+    s_stats = dispatch_stats(switch_fn, a, b, jnp.int32(2))
+    tile_jit, switch_jit = jax.jit(tile_fn), jax.jit(switch_fn)
+    match = True
+    for mv in (1, 2, 3):
+        s = jnp.int32(mv)
+        match &= bool((np.asarray(tile_jit(a, b, s))
+                       == np.asarray(switch_jit(a, b, s))).all())
+    return {
+        "kind": "runtime",
+        "n": n,
+        "modes_equal_switch": match,
+        "tile_switches": t_stats["switches"],
+        "tile_pallas_calls": t_stats["pallas_calls"],
+        "switch_switches": s_stats["switches"],
+        "switch_pallas_calls": s_stats["pallas_calls"],
+        "tile_compile_count": tile_jit._cache_size(),
+        "switch_compile_count": switch_jit._cache_size(),
+        "tile_wall_us": round(_wall_us(tile_jit, a, b, jnp.int32(3), iters=iters), 1),
+        "switch_wall_us": round(
+            _wall_us(switch_jit, a, b, jnp.int32(3), iters=iters), 1),
+    }
+
+
+def magnitude_cell(rng, n: int, iters: int) -> dict:
+    a, b = _operands(rng, n, outlier=True)
+    bm, bn, bk = BLOCK
+    mm = np.asarray(magnitude_map(a, b, BUDGET, bm=bm, bn=bn, bk=bk))
+    grid, _ = tile_grid(n, n, n, bm=bm, bn=bn, bk=bk)
+    gk = grid[2]
+    kmax = MODE_LIMBS[Mode.M24]
+    # retained Karatsuba passes per tile: k(k+1)/2; uniform-max pays kmax
+    # everywhere — the cost the switch path is forced into by one hot tile
+    def passes(k):
+        return k * (k + 1) // 2
+
+    tile_passes = int(sum(passes(int(k)) for k in mm.ravel()) * gk)
+    max_passes = int(passes(kmax) * mm.size * gk)
+    out = np.asarray(
+        tile_matmul_auto(a, b, BUDGET, bm=bm, bn=bn, bk=bk), np.float64)
+    ref = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    # the budget is relative to the magnitude envelope S = amax*bmax*K
+    scale = float(np.abs(a).max()) * float(np.abs(b).max()) * n
+    err = float(np.abs(out - ref).max())
+    hist = {Mode(int(v)).name: int(c)
+            for v, c in zip(*np.unique(mm, return_counts=True))}
+    def auto(a_, b_):
+        return tile_matmul_auto(a_, b_, BUDGET, bm=bm, bn=bn, bk=bk)
+
+    def forced(a_, b_):
+        return mp_matmul(a_, b_, Mode.M24, impl="tile", block=BLOCK)
+    return {
+        "kind": "magnitude",
+        "n": n,
+        "budget": BUDGET,
+        "rel_err_vs_envelope": err / scale,
+        "budget_met": err <= BUDGET * scale,
+        "mode_histogram": hist,
+        "modes_used": len(hist),
+        "tile_passes": tile_passes,
+        "uniform_max_passes": max_passes,
+        "pass_ratio": round(tile_passes / max_passes, 4),
+        "tile_wall_us": round(_wall_us(jax.jit(auto), a, b, iters=iters), 1),
+        "uniform_max_wall_us": round(_wall_us(jax.jit(forced), a, b, iters=iters), 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated square sizes (default 128,256)")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized: smallest shape, 1 timing iter")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    if args.sizes:
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+    else:
+        sizes = QUICK_SIZES if args.quick else SIZES
+    iters = 1 if args.quick else args.iters
+
+    rng = np.random.default_rng(0)
+    cells = []
+    for n in sizes:
+        for cell in uniform_cells(rng, n, iters):
+            cells.append(cell)
+            print(f"n={n} uniform {cell['mode']}: bitwise={cell['bitwise_equal']} "
+                  f"tile {cell['tile_wall_us']}us vs pallas {cell['pallas_wall_us']}us")
+        cell = runtime_cell(rng, n, iters)
+        cells.append(cell)
+        print(f"n={n} runtime: dispatches {cell['tile_pallas_calls']} fused / "
+              f"{cell['tile_switches']} switches (switch path: "
+              f"{cell['switch_switches']} switch x {cell['switch_pallas_calls']} "
+              f"branches), compile x{cell['tile_compile_count']}, "
+              f"{cell['tile_wall_us']}us vs {cell['switch_wall_us']}us")
+        cell = magnitude_cell(rng, n, iters)
+        cells.append(cell)
+        print(f"n={n} magnitude: modes={cell['mode_histogram']} "
+              f"pass_ratio={cell['pass_ratio']} "
+              f"err/envelope={cell['rel_err_vs_envelope']:.1e} "
+              f"(budget {cell['budget']:.1e}) "
+              f"{cell['tile_wall_us']}us vs forced-M24 {cell['uniform_max_wall_us']}us")
+    doc = {
+        "host_backend": jax.default_backend(),
+        "block": list(BLOCK),
+        "budget": BUDGET,
+        "iters": iters,
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"wrote {args.out} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main()

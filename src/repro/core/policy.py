@@ -19,7 +19,7 @@ class PrecisionPolicy:
     default: Mode = Mode.M24
     overrides: tuple[tuple[str, Mode], ...] = ()
     rounding: str = "rne"
-    impl: str = "xla"  # 'xla' | 'pallas' | 'native' | 'auto' (planner picks)
+    impl: str = "xla"  # 'xla' | 'pallas' | 'tile' | 'native' | 'auto' (planner picks)
     # Largest Strassen depth the planner (repro.plan) may choose for this
     # policy's matmuls.  0 keeps every contraction classical — bit-identical
     # to the pre-planner dispatch; serving/benchmark paths opt in.

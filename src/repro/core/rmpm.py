@@ -15,6 +15,10 @@ Implementation paths:
         pass to an MXU matmul (this is what the dry-run/roofline measures).
   * ``impl='pallas'`` — fused limb-extraction + multi-pass matmul kernel
         (kernels/limb_matmul); TPU target, validated in interpret mode.
+  * ``impl='tile'``   — partitioned-SIMD kernel (kernels/tile_matmul): a
+        per-tile mode map rides along as a runtime argument, so one fused
+        dispatch serves every f32-ladder mode (and mixed-mode maps) with no
+        ``lax.switch`` — uniform maps are bit-identical to impl='pallas'.
   * ``impl='native'`` — plain f32 jnp.dot reference execution (numerically
         ~= M24); used for fast CPU end-to-end examples.
 
@@ -155,9 +159,8 @@ def mp_einsum(
     owns (same contract as ``mp_matmul``).
     """
     mode = Mode(mode)
-    if impl == "pallas" and eq == "mk,kn->mn" and mode != Mode.AUTO:
-        return mp_matmul(a, b, mode, rounding=rounding, impl="pallas",
-                         block=block)
+    if impl in ("pallas", "tile") and eq == "mk,kn->mn" and mode != Mode.AUTO:
+        return mp_matmul(a, b, mode, rounding=rounding, impl=impl, block=block)
     if impl == "native" or mode == Mode.AUTO:
         if mode == Mode.AUTO:
             raise ValueError("AUTO requires mp_matmul_runtime / mp_einsum_runtime")
@@ -199,6 +202,13 @@ def mp_matmul(
             mp_matmul, mode=mode, rounding=rounding, impl=impl, block=block
         )
         return strassen_lib.strassen_matmul(a, b, depth=strassen_depth, leaf_fn=leaf)
+    if impl == "tile":
+        from repro.kernels.tile_matmul import ops as tile_ops
+
+        bm, bn, bk = block if block is not None else tile_ops.DEFAULT_BLOCK
+        return tile_ops.tile_matmul_mode(
+            a, b, mode, rounding=rounding, bm=bm, bn=bn, bk=bk
+        )
     if impl == "pallas":
         from repro.kernels.limb_matmul import ops as limb_ops
 
@@ -269,6 +279,16 @@ def mp_matmul_runtime(
         )
     else:
         selected = mode_scalar
+    if impl == "tile":
+        # Partitioned-SIMD path: ONE fused dispatch for every mode — the
+        # traced scalar becomes a uniform tile map inside the kernel instead
+        # of selecting one of N branch executables.
+        from repro.kernels.tile_matmul import ops as tile_ops
+
+        bm, bn, bk = block if block is not None else tile_ops.DEFAULT_BLOCK
+        return tile_ops.tile_matmul_runtime(
+            a, b, selected, rounding=rounding, bm=bm, bn=bn, bk=bk
+        )
     branches = [
         functools.partial(mp_matmul, mode=m, rounding=rounding, impl=impl,
                           block=block)
@@ -303,6 +323,15 @@ def mp_einsum_runtime(
             "branches is a no-op; use the static mp_einsum instead"
         )
     mode_scalar = jnp.asarray(mode, jnp.int32)
+    if impl == "tile":
+        if eq == "mk,kn->mn":
+            return mp_matmul_runtime(
+                a, b, mode_scalar, rounding=rounding, impl="tile", block=block,
+                allow_auto=False,
+            )
+        # General contractions have no tile kernel; keep the switch over the
+        # XLA limb algebra rather than silently changing numerics.
+        impl = "xla"
     branches = [
         functools.partial(mp_einsum, eq, mode=m, rounding=rounding, impl=impl,
                           block=block)

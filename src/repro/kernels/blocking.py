@@ -1,0 +1,62 @@
+"""Shared blocking helpers for the Pallas kernel wrappers.
+
+Every kernel wrapper in ``repro.kernels`` does the same dance: clamp the
+requested block to the actual dims, pad the operands up to block multiples,
+run the kernel on the padded arrays, and strip the padding from the result.
+This module is the single home for that logic (used by limb_matmul,
+quantize_mantissa, and tile_matmul) plus the backend-aware ``interpret``
+default shared by all kernel entry points.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# f32 sublane quantum on TPU: the second-to-last dim of a tile must be a
+# multiple of 8 (the last dim quantum of 128 is handled by padding, not
+# clamping — a 128-wide block on a 100-wide array just pads to 128).
+BLOCK_QUANTUM = 8
+
+
+def ceil_to(x: int, m: int) -> int:
+    """Round ``x`` up to the next multiple of ``m``."""
+    return -(-x // m) * m
+
+
+def default_interpret() -> bool:
+    """Backend-aware default for Pallas ``interpret``: interpret on CPU
+    (no Mosaic lowering there), compile everywhere else.
+
+    Called at Python time by the non-jit public wrappers, so tests can
+    monkeypatch ``jax.default_backend`` and callers can still override
+    explicitly via ``interpret=bool``.
+    """
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` means "pick for the current backend"."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def clamp_block(block: int, dim: int, quantum: int = BLOCK_QUANTUM) -> int:
+    """Largest useful block for a dim: the requested ``block`` when the dim
+    fills it, else the dim rounded up to the tiling quantum.
+
+    The naive ``min(block, dim)`` yields non-multiple-of-8 blocks for
+    degenerate shapes (M=1 decode rows -> block 1), which violates the f32
+    sublane quantum and pessimizes tiling; ``clamp_block(128, 1) == 8``.
+    """
+    if dim >= block:
+        return block
+    return ceil_to(max(dim, 1), quantum)
+
+
+def pad_to_block(x: jax.Array, bm: int, bn: int) -> jax.Array:
+    """Zero-pad a 2D array up to multiples of ``(bm, bn)``.
+
+    Zero padding is exact for every op in this package: padded rows/cols
+    contribute ``x + 0.0 == x`` to f32 accumulation and quantize to zero.
+    """
+    m, n = x.shape
+    return jnp.pad(x, ((0, ceil_to(m, bm) - m), (0, ceil_to(n, bn) - n)))

@@ -1,4 +1,11 @@
-"""Jitted public wrapper for the limb_matmul Pallas kernel."""
+"""Public wrapper for the limb_matmul Pallas kernel.
+
+``limb_matmul`` is a thin non-jit shell that resolves the backend-aware
+``interpret`` default (interpret on CPU, compiled Mosaic elsewhere — see
+``kernels.blocking.default_interpret``) and calls the jitted ``_limb_matmul``
+body.  The resolution happens OUTSIDE the jit boundary so an explicit
+override or a different backend is never frozen into a cached trace.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,14 +13,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.blocking import clamp_block, pad_to_block, resolve_interpret
 from repro.kernels.limb_matmul.limb_matmul import limb_matmul_pallas
 
 
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret", "rounding"))
 def limb_matmul(
     a: jax.Array,
     b: jax.Array,
@@ -23,15 +26,33 @@ def limb_matmul(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Multi-precision matmul a (..., K) @ b (K, N) via the fused Pallas
     kernel; pads to block multiples and strips the padding.
 
-    ``interpret=True`` executes the kernel body on CPU (this container);
-    on TPU pass interpret=False.  Only RNE limb extraction is fused; the
+    ``interpret=None`` (default) interprets on CPU and compiles elsewhere;
+    pass a bool to force either.  Only RNE limb extraction is fused; the
     paper's GRTE rounding runs through kernels/quantize_mantissa first.
     """
+    return _limb_matmul(
+        a, b, k, rounding=rounding, bm=bm, bn=bn, bk=bk,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret", "rounding"))
+def _limb_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    k: int,
+    *,
+    rounding: str,
+    bm: int,
+    bn: int,
+    bk: int,
+    interpret: bool,
+) -> jax.Array:
     if rounding != "rne":
         from repro.kernels.quantize_mantissa.ops import quantize_mantissa_op
 
@@ -42,9 +63,8 @@ def limb_matmul(
     n = b.shape[-1]
     a2 = a.reshape(-1, kdim).astype(jnp.float32)
     m = a2.shape[0]
-    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, kdim)
-    mp_, kp, np_ = _ceil_to(m, bm_), _ceil_to(kdim, bk_), _ceil_to(n, bn_)
-    a2 = jnp.pad(a2, ((0, mp_ - m), (0, kp - kdim)))
-    b2 = jnp.pad(b.astype(jnp.float32), ((0, kp - kdim), (0, np_ - n)))
+    bm_, bn_, bk_ = clamp_block(bm, m), clamp_block(bn, n), clamp_block(bk, kdim)
+    a2 = pad_to_block(a2, bm_, bk_)
+    b2 = pad_to_block(b.astype(jnp.float32), bk_, bn_)
     out = limb_matmul_pallas(a2, b2, k, bm=bm_, bn=bn_, bk=bk_, interpret=interpret)
     return out[:m, :n].reshape(*lead, n)

@@ -1,4 +1,9 @@
-"""Jitted public wrapper for the quantize_mantissa Pallas kernel."""
+"""Public wrapper for the quantize_mantissa Pallas kernel.
+
+Non-jit shell (backend-aware ``interpret`` resolution, ``keep`` validation)
+around the jitted ``_quantize_mantissa`` body — same structure as
+``limb_matmul``; see ``kernels.blocking``.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,35 +11,42 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.blocking import clamp_block, pad_to_block, resolve_interpret
 from repro.kernels.quantize_mantissa.quantize_mantissa import quantize_mantissa_pallas
 
 
-def _ceil_to(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-@functools.partial(jax.jit, static_argnames=("keep", "rounding", "interpret"))
 def quantize_mantissa_op(
     x: jax.Array,
     keep: int,
     rounding: str = "grte",
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Quantize the mantissa of an arbitrary-shape f32 array to ``keep``
     explicit bits with the selected rounding (trunc | rne | grte).
     ``keep`` must be >= 1 (the kernel rejects values that would reach into
-    the exponent/sign fields, matching the jnp oracle)."""
+    the exponent/sign fields, matching the jnp oracle); ``keep >= 23`` is
+    the identity.  ``interpret=None`` interprets on CPU, compiles elsewhere."""
     if keep < 1:
         raise ValueError(f"keep must be >= 1, got {keep}")
     if keep >= 23:
         return x
+    return _quantize_mantissa(x, keep, rounding, interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("keep", "rounding", "interpret"))
+def _quantize_mantissa(
+    x: jax.Array,
+    keep: int,
+    rounding: str,
+    *,
+    interpret: bool,
+) -> jax.Array:
     shape = x.shape
     flat = x.reshape(1, -1) if x.ndim < 2 else x.reshape(-1, shape[-1])
     m, n = flat.shape
-    bm, bn = min(256, m), min(256, n)
-    mp_, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
-    padded = jnp.pad(flat, ((0, mp_ - m), (0, np_ - n)))
+    bm, bn = clamp_block(256, m), clamp_block(256, n)
+    padded = pad_to_block(flat, bm, bn)
     out = quantize_mantissa_pallas(
         padded, keep, rounding, block=(bm, bn), interpret=interpret
     )

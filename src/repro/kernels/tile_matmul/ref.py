@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the tile_matmul Pallas kernel.
+
+Deliberately written from scratch (NOT importing the kernel or core.rmpm):
+it materializes each (bm, bn) output tile independently at its mapped limb
+count, against the full (padded) contraction split into bk slabs in the same
+K-innermost order as the kernel grid — an independent formulation of the
+same per-tile arithmetic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tile_matmul_ref(
+    a: jax.Array, b: jax.Array, mode_map, *, bm: int, bn: int, bk: int
+) -> jax.Array:
+    """a (M, K) f32 @ b (K, N) f32 (block multiples) with per-tile limb
+    counts from ``mode_map`` ((gm, gn) or (gm, gn, gk) ints)."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    mode_map = np.asarray(mode_map)
+    m, kdim = a.shape
+    n = b.shape[1]
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
+    gk = kdim // bk
+
+    def limbs(x, k):
+        out, r = [], jnp.asarray(x)
+        for _ in range(k):
+            li = r.astype(jnp.bfloat16)
+            out.append(li)
+            r = r - li.astype(jnp.float32)
+        return out
+
+    out = np.zeros((m, n), np.float32)
+    for i in range(m // bm):
+        for j in range(n // bn):
+            acc = jnp.zeros((bm, bn), jnp.float32)
+            for kk in range(gk):
+                k_tile = int(
+                    mode_map[i, j, kk] if mode_map.ndim == 3 else mode_map[i, j]
+                )
+                at = a[i * bm : (i + 1) * bm, kk * bk : (kk + 1) * bk]
+                bt = b[kk * bk : (kk + 1) * bk, j * bn : (j + 1) * bn]
+                al, bl = limbs(at, k_tile), limbs(bt, k_tile)
+                terms = sorted(
+                    [
+                        (ti, tj)
+                        for ti in range(k_tile)
+                        for tj in range(k_tile)
+                        if ti + tj < k_tile
+                    ],
+                    key=lambda ij: -(ij[0] + ij[1]),
+                )
+                for ti, tj in terms:
+                    acc = acc + jnp.dot(
+                        al[ti], bl[tj], preferred_element_type=jnp.float32
+                    )
+            out[i * bm : (i + 1) * bm, j * bn : (j + 1) * bn] = np.asarray(acc)
+    return jnp.asarray(out)

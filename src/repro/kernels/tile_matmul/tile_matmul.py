@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: partitioned-SIMD limb matmul with a per-tile mode map.
+
+The paper's core trick is ONE wide multiplier that dynamically partitions
+into many narrow ones at run time.  ``limb_matmul_pallas`` reproduces the
+multi-pass limb datapath but at whole-matmul granularity: every output tile
+runs the same k limb passes, and run-time mode switching happens OUTSIDE the
+kernel as an N-branch ``lax.switch``.  This kernel moves the partitioning
+inside the dispatch: a per-tile int32 **mode map** rides along as a
+scalar-prefetch operand (SMEM), and each (bm, bn) output tile runs exactly
+``map[i, j]`` limb passes — a tile at M8 does 1 MXU pass while its neighbor
+at M24 does 6, inside one fused kernel launch.
+
+Key properties (pinned by tests/test_tile.py):
+
+* **Uniform-map exactness** — for a constant map at mode m, the retained
+  Karatsuba terms executed per tile are exactly ``limb_product_terms(m)`` in
+  the same order (``limb_product_terms`` sorts high-order-first with a stable
+  sort, so filtering kmax's term list by ``i + j < m`` preserves both the
+  set and the order), the first m limbs of a kmax-limb extraction equal an
+  m-limb extraction, and the block/grid walk is identical — so the output is
+  bit-identical to ``limb_matmul_pallas(k=m)`` by construction.
+* **Zero-recompile reconfiguration** — the map is a traced runtime argument;
+  changing tile modes (or the whole map) reuses the compiled executable,
+  exactly like the traced mode scalar in ``mp_matmul_runtime``.
+* **Mode values ARE limb counts** on the f32 ladder (Mode.M8=1, M16=2,
+  M24=3), so a mode map doubles as the limb-count map with no translation.
+
+The map is ``(M/bm, N/bn)`` int32 (one mode per output tile) or
+``(M/bm, N/bn, K/bk)`` (additionally per K-slab, for contraction-dim
+partitioning).  Entries must lie in [1, kmax].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.limb import limb_product_terms
+from repro.kernels.limb_matmul.limb_matmul import _extract_limbs
+
+
+def _tile_matmul_kernel(
+    mode_ref, a_ref, b_ref, out_ref, acc_ref, *, kmax: int, n_k_tiles: int, map_ndim: int
+):
+    """One (bm, bn) output tile x one bk slab, at the tile's mapped mode."""
+    i, j, kk = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # SMEM scalar read: limb count for this tile (== its Mode value).
+    k_tile = mode_ref[i, j, kk] if map_ndim == 3 else mode_ref[i, j]
+
+    a_limbs = _extract_limbs(a_ref[...], kmax)
+    b_limbs = _extract_limbs(b_ref[...], kmax)
+
+    # Same static term order as the uniform kernel (high-order first); each
+    # pass is predicated on the tile's mode so cheap tiles skip MXU passes.
+    for ti, tj in limb_product_terms(kmax):
+
+        @pl.when(ti + tj < k_tile)
+        def _pass(ti=ti, tj=tj):
+            acc_ref[...] += jax.lax.dot_general(
+                a_limbs[ti],
+                b_limbs[tj],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    @pl.when(kk == n_k_tiles - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kmax", "bm", "bn", "bk", "interpret")
+)
+def tile_matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    mode_map: jax.Array,
+    *,
+    kmax: int = 3,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """a (M, K) f32 @ b (K, N) f32 -> (M, N) f32, per-tile limb counts.
+
+    Shapes must be multiples of the block sizes (ops.py pads); ``mode_map``
+    is int32 of shape (M/bm, N/bn) or (M/bm, N/bn, K/bk) with entries in
+    [1, kmax].
+    """
+    m, kdim = a.shape
+    _, n = b.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (a.shape, b.shape, bm, bn, bk)
+    n_k_tiles = kdim // bk
+    grid = (m // bm, n // bn, n_k_tiles)
+    map_ndim = mode_map.ndim
+    assert map_ndim in (2, 3), mode_map.shape
+    expect = grid[:2] if map_ndim == 2 else grid
+    assert mode_map.shape == expect, (mode_map.shape, expect)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        # Under scalar prefetch the index maps receive the SMEM ref(s) as
+        # extra trailing args.
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, mref: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk, mref: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, mref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _tile_matmul_kernel, kmax=kmax, n_k_tiles=n_k_tiles, map_ndim=map_ndim
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(mode_map.astype(jnp.int32), a, b)

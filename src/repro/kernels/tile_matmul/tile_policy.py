@@ -1,0 +1,174 @@
+"""Mode-map construction for the partitioned tile_matmul kernel.
+
+Three map sources, coarsest to finest:
+
+* ``uniform_map``   — constant map from a static Mode: reproduces today's
+  whole-matmul granularity, bit-exact with ``mp_matmul(impl="pallas")``.
+* ``table_map``     — a (possibly traced) per-site mode scalar — e.g. from
+  ``repro.adapt``'s ModeTable — broadcast into a map.  This is the bridge
+  that lets the hysteresis controller steer the tile kernel today and
+  individual tiles later: the map is a runtime argument, so per-tile values
+  need no new compilation.
+* ``magnitude_map`` — per-tile operand abs-max statistics pick the cheapest
+  mode meeting a per-tile error budget, so one outlier-heavy tile no longer
+  forces the entire matmul to the expensive mode.
+
+``magnitude_map`` budget semantics: the worst-case absolute error of a tile
+computed at mode m is bounded by ``eps_m * amax_tile(A) * amax_tile(B) * K``
+(eps_m = the mode's relative-error ceiling from ``repro.plan.cost``; every
+one of the K products errs by at most eps_m relative to its operands).  Each
+tile takes the cheapest mode whose bound fits the budget; ``relative=True``
+(default) expresses the budget as a fraction of the global magnitude
+envelope ``S = max_tile(amax_A) * max_tile(amax_B) * K`` — so tiles whose
+operands are small relative to the matmul's dominant tiles get cheap modes.
+The bound is conservative (random-sign accumulation does not attain it), so
+the measured error sits well inside the budget (gated in
+``check_regression --tile-new``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import F32_MODES, MODE_LIMBS, Mode
+from repro.kernels.blocking import pad_to_block
+from repro.kernels.tile_matmul.ops import tile_grid
+
+
+def _f32_ladder_eps() -> list[tuple[int, float]]:
+    """(limb count, relative-error ceiling) for the f32 ladder, cheap first."""
+    from repro.plan.cost import MODE_REL_ERROR  # lazy: avoid kernels<->plan cycle
+
+    return sorted((MODE_LIMBS[m], MODE_REL_ERROR[m]) for m in F32_MODES)
+
+
+def uniform_map(
+    shape_a: tuple[int, ...],
+    shape_b: tuple[int, int],
+    mode: Mode,
+    *,
+    per_k: bool = False,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+) -> jax.Array:
+    """Constant mode map for ``a @ b`` — the bit-exact-with-today source."""
+    mode = Mode(mode)
+    if mode not in F32_MODES:
+        raise ValueError(f"tile maps cover the f32 ladder {F32_MODES}, got {mode!r}")
+    grid = _grid_for(shape_a, shape_b, bm, bn, bk)
+    shape = grid if per_k else grid[:2]
+    return jnp.full(shape, MODE_LIMBS[mode], dtype=jnp.int32)
+
+
+def table_map(
+    shape_a: tuple[int, ...],
+    shape_b: tuple[int, int],
+    mode_scalar,
+    *,
+    per_k: bool = False,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+) -> jax.Array:
+    """Broadcast a per-site mode scalar (static or TRACED, e.g. one entry of
+    ``repro.adapt``'s ModeTable) into a tile map.  Values are clipped to the
+    f32 ladder's limb range [1, 3]."""
+    grid = _grid_for(shape_a, shape_b, bm, bn, bk)
+    shape = grid if per_k else grid[:2]
+    kmax = max(MODE_LIMBS[m] for m in F32_MODES)
+    k = jnp.clip(jnp.asarray(mode_scalar, jnp.int32), 1, kmax)
+    return jnp.full(shape, 1, dtype=jnp.int32) * k
+
+
+def magnitude_map(
+    a: jax.Array,
+    b: jax.Array,
+    budget: float,
+    *,
+    relative: bool = True,
+    per_k: bool = False,
+    max_mode: Mode = Mode.M24,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+) -> jax.Array:
+    """Per-tile cheapest mode meeting the error budget (see module docs).
+
+    Returns an int32 map of limb counts in [1, limbs(max_mode)]; tiles whose
+    bound fits no cheaper mode fall back to ``max_mode``.
+    """
+    max_mode = Mode(max_mode)
+    if max_mode not in F32_MODES:
+        raise ValueError(f"max_mode must be on the f32 ladder, got {max_mode!r}")
+    kdim = a.shape[-1]
+    n = b.shape[-1]
+    a2 = jnp.abs(a.reshape(-1, kdim).astype(jnp.float32))
+    b2 = jnp.abs(b.astype(jnp.float32))
+    m = a2.shape[0]
+    grid, (bm_, bn_, bk_) = tile_grid(m, n, kdim, bm=bm, bn=bn, bk=bk)
+    gm, gn, gk = grid
+    # Per-(row-tile, k-slab) and per-(k-slab, col-tile) operand maxima.
+    amax = pad_to_block(a2, bm_, bk_).reshape(gm, bm_, gk, bk_).max(axis=(1, 3))
+    bmax = pad_to_block(b2, bk_, bn_).reshape(gk, bk_, gn, bn_).max(axis=(1, 3))
+    if per_k:
+        mag = amax[:, None, :] * bmax.transpose(1, 0)[None, :, :] * bk_  # (gm, gn, gk)
+    else:
+        mag = amax.max(axis=1)[:, None] * bmax.max(axis=0)[None, :] * kdim  # (gm, gn)
+    scale = amax.max() * bmax.max() * (bk_ if per_k else kdim)
+    abs_budget = budget * scale if relative else jnp.asarray(budget, jnp.float32)
+    kmax = MODE_LIMBS[max_mode]
+    mode = jnp.full(mag.shape, kmax, dtype=jnp.int32)
+    # Walk the ladder expensive -> cheap so the final value is the cheapest
+    # mode whose worst-case bound eps * mag fits the budget.
+    for limbs, eps in sorted(_f32_ladder_eps(), reverse=True):
+        if limbs > kmax:
+            continue
+        mode = jnp.where(eps * mag <= abs_budget, jnp.int32(limbs), mode)
+    return mode
+
+
+def _grid_for(shape_a, shape_b, bm, bn, bk) -> tuple[int, int, int]:
+    lead_m = 1
+    for d in shape_a[:-1]:
+        lead_m *= d
+    grid, _ = tile_grid(lead_m, shape_b[-1], shape_a[-1], bm=bm, bn=bn, bk=bk)
+    return grid
+
+
+def dispatch_stats(fn, *args, **kwargs) -> dict[str, int]:
+    """Trace ``fn(*args, **kwargs)`` and count precision-dispatch structure:
+    ``switches`` (lax.switch/cond equations — the old N-branch runtime path)
+    and ``pallas_calls`` (fused kernel dispatches).  Descends through nested
+    jaxprs but NOT into kernel bodies, so the predicated passes inside the
+    tile kernel do not count as switches.  Used by tests and tile_sweep to
+    assert the tile path collapses N branches into one dispatch.
+    """
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    stats = {"switches": 0, "pallas_calls": 0}
+    _walk(jaxpr.jaxpr, stats)
+    return stats
+
+
+def _subjaxprs(params):
+    """Nested jaxprs in an equation's params, version-portable (duck-typed
+    on .eqns / .jaxpr instead of jax.core types, which moved across jax
+    releases)."""
+    for val in params.values():
+        for item in val if isinstance(val, (tuple, list)) else (val,):
+            if hasattr(item, "eqns"):  # Jaxpr
+                yield item
+            elif hasattr(item, "jaxpr") and hasattr(getattr(item, "jaxpr"), "eqns"):
+                yield item.jaxpr  # ClosedJaxpr
+
+
+def _walk(jaxpr, stats) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            stats["pallas_calls"] += 1
+            continue  # kernel-internal predication is not a dispatch
+        if name == "cond":
+            stats["switches"] += 1
+        for sub in _subjaxprs(eqn.params):
+            _walk(sub, stats)

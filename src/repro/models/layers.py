@@ -33,10 +33,14 @@ def pmm(x: Array, w: Array, op: str, policy: PrecisionPolicy) -> Array:
     When the call-site is bound to a runtime mode scalar (repro.adapt's
     ``bind_modes``, installed by the adaptive serve/train steps), the plan's
     static mode becomes merely the initial condition: execution routes
-    through ``mp_matmul_runtime``'s ``lax.switch`` with the plan's
-    impl/tuned block preserved, and the scalar — a jit argument — selects
-    the live branch with zero recompiles.  Only f32-ladder plans are
-    switchable; DF32/Strassen plans keep their static path.
+    through ``mp_matmul_runtime`` with the plan's impl/tuned block
+    preserved, and the scalar — a jit argument — reconfigures precision
+    with zero recompiles.  Tile-eligible plans (``Plan.tile_eligible``:
+    pallas-class f32 plans) take the partitioned-SIMD kernel — the scalar
+    becomes a uniform per-tile mode map inside ONE fused dispatch,
+    bit-identical to the pallas branch the ``lax.switch`` would have
+    picked; other impls keep the N-branch switch.  Only f32-ladder plans
+    are switchable; DF32/Strassen plans keep their static path.
     """
     plan = plan_matmul(
         tuple(x.shape),
@@ -57,10 +61,11 @@ def pmm(x: Array, w: Array, op: str, policy: PrecisionPolicy) -> Array:
         # switch branches are classical (depth applies per static mode only).
         # Mode tables hold concrete modes, so the AUTO operand probe is
         # skipped (allow_auto=False — it would re-read both operands).
+        # 'native' cannot express a mode switch; xla keeps the lax.switch
+        impl = "tile" if plan.tile_eligible else "xla"
         return mp_matmul_runtime(
             x, w, rt_mode, rounding=plan.rounding,
-            impl=plan.impl if plan.impl in ("xla", "pallas") else "xla",
-            block=plan.block, allow_auto=False,
+            impl=impl, block=plan.block, allow_auto=False,
         )
     return execute(plan, x, w)
 
@@ -78,7 +83,7 @@ def pein(eq: str, a: Array, b: Array, op: str, policy: PrecisionPolicy) -> Array
         # (plain f32, mode-blind) cannot express a mode switch, so the xla
         # limb algebra is the runtime path even for native policies —
         # adaptation trades the native fast path for reconfigurability
-        impl = policy.impl if policy.impl in ("xla", "pallas") else "xla"
+        impl = policy.impl if policy.impl in ("xla", "pallas", "tile") else "xla"
         return mp_einsum_runtime(
             eq, a, b, rt_mode, rounding=policy.rounding, impl=impl
         )

@@ -128,7 +128,10 @@ def limb_factors(mode: Mode, impl: str) -> tuple[int, float]:
     if impl == "native":
         return 1, 1.0
     passes = MODE_PASSES[mode]
-    if impl == "pallas":
+    if impl in ("pallas", "tile"):
+        # 'tile' shares the fused-kernel roofline: a uniform map runs the
+        # same passes over the same once-read blocks; the per-tile mode map
+        # itself is O(grid) int32 — negligible traffic.
         return passes, 1.0
     # xla: each of the `passes` bf16 dots reads one limb of A and one of B.
     return passes, passes * (BF16_BYTES / F32_BYTES)

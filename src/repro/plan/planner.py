@@ -51,7 +51,7 @@ class Plan:
     shape_b: tuple[int, int]  # (K, N)
     dtype: str  # 'float32' | 'df32'
     mode: Mode
-    impl: str  # 'xla' | 'pallas' | 'native'
+    impl: str  # 'xla' | 'pallas' | 'native' | 'tile'
     strassen_depth: int
     rounding: str
     backend: str
@@ -68,8 +68,22 @@ class Plan:
     #: measured/scaled seconds under a tuning table, cost.t_total_s otherwise.
     t_resolved_s: float | None = None
     #: Pallas (bm, bn, bk) tile override carried from the winning tuning
-    #: record; None = kernel defaults.  Only meaningful for impl='pallas'.
+    #: record; None = kernel defaults.  Meaningful for impl='pallas'/'tile'.
     block: tuple[int, int, int] | None = None
+    #: how the tile kernel's per-tile mode map is built (impl='tile' only):
+    #: 'uniform' (one mode everywhere — bit-exact with impl='pallas') or
+    #: 'magnitude' (per-tile operand abs-max picks the cheapest mode meeting
+    #: the plan's accuracy budget; see kernels/tile_matmul/tile_policy.py).
+    map_source: str = "uniform"
+
+    @property
+    def tile_eligible(self) -> bool:
+        """True when a runtime-bound call site (models.layers.pmm) may route
+        this plan through the partitioned tile kernel: the fused single-
+        dispatch path covers exactly what impl='pallas' covers (f32 ladder),
+        and a uniform map is bit-identical to the pallas branch — so any
+        pallas-or-tile plan is eligible."""
+        return self.impl in ("pallas", "tile") and self.dtype == "float32"
 
     @property
     def batch(self) -> int:
@@ -265,6 +279,12 @@ def _impl_candidates(
         # Fused limb extraction only pays off with >= 2 limbs resident.
         if MODE_LIMBS[mode] >= 2:
             cands.append("pallas")
+        # The partitioned tile kernel shares the pallas roofline (same fused
+        # blocks; the map is O(grid) int32), so on ties the earlier 'pallas'
+        # candidate wins and committed plan baselines stay stable — 'tile'
+        # is selected when a tuning table measures it faster, when pinned,
+        # or by the runtime-dispatch layer (Plan.tile_eligible).
+        cands.append("tile")
     return cands
 
 
@@ -293,6 +313,7 @@ def plan_matmul(
     max_depth: int = _MAX_DEPTH_DEFAULT,
     align: int = 128,
     tune_table: Any = None,
+    map_source: str = "uniform",
 ) -> Plan:
     """Choose (mode, Strassen depth, impl) for ``a @ b`` from the cost model.
 
@@ -303,7 +324,12 @@ def plan_matmul(
       accuracy: max acceptable relative error; the cheapest adequate RMPM
         mode is selected (None -> single-precision fidelity, M24).
       mode: pin the RMPM mode instead of deriving it from ``accuracy``.
-      impl: pin the execution impl ('xla' | 'pallas' | 'native').
+      impl: pin the execution impl ('xla' | 'pallas' | 'native' | 'tile').
+      map_source: tile-map construction for impl='tile' — 'uniform'
+        (default; bit-exact with 'pallas') or 'magnitude' (per-tile operand
+        statistics pick the cheapest mode within the accuracy budget;
+        requires ``accuracy`` and forces impl='tile', the plan's mode being
+        the per-tile ceiling).
       backend: 'cpu' | 'tpu' | 'gpu'; None -> ``jax.default_backend()``.
       rounding: limb-extraction rounding ('rne' | 'grte' | 'trunc').
       max_depth: largest Strassen depth the cost model may choose.
@@ -322,15 +348,30 @@ def plan_matmul(
         raise ValueError(f"need A (..., M, K) and B (K, N); got {shape_a} @ {shape_b}")
     if shape_a[-1] != shape_b[0]:
         raise ValueError(f"contraction mismatch {shape_a} @ {shape_b}")
-    if impl is not None and impl not in ("xla", "pallas", "native"):
-        raise ValueError(f"unknown impl {impl!r}: want 'xla' | 'pallas' | 'native'")
+    if impl is not None and impl not in ("xla", "pallas", "native", "tile"):
+        raise ValueError(
+            f"unknown impl {impl!r}: want 'xla' | 'pallas' | 'native' | 'tile'"
+        )
     if dtype not in ("float32", _DF32):
         raise ValueError(f"unknown dtype {dtype!r}: want 'float32' | 'df32'")
+    if map_source not in ("uniform", "magnitude"):
+        raise ValueError(
+            f"unknown map_source {map_source!r}: want 'uniform' | 'magnitude'"
+        )
+    if map_source == "magnitude":
+        if impl is None:
+            impl = "tile"  # per-tile maps exist only in the tile kernel
+        elif impl != "tile":
+            raise ValueError(f"map_source='magnitude' requires impl='tile', got {impl!r}")
+        if accuracy is None:
+            raise ValueError("map_source='magnitude' needs an accuracy budget")
+        if dtype == _DF32:
+            raise ValueError("map_source='magnitude' covers the f32 ladder only")
     if backend is None:
         backend = jax.default_backend()
     table = _resolve_tune_table(tune_table, backend)
     key = (shape_a, shape_b, dtype, accuracy, mode if mode is None else int(mode),
-           impl, backend, rounding, max_depth, align,
+           impl, backend, rounding, max_depth, align, map_source,
            table.fingerprint if table is not None else None)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
@@ -373,9 +414,14 @@ def plan_matmul(
     # hand-entered TPU-balance defaults apply.
     balance = table.balance if table is not None else cost_lib.DEFAULT_BALANCE
     best: tuple[tuple, CostEstimate, str, int, str, Any] | None = None
+    # Magnitude maps are defined on the whole GEMM's tile grid; Strassen's
+    # block adds/subtracts would scramble the per-tile magnitudes the map
+    # was derived from, so the recursion is disabled for that source.
+    depths = ([0] if map_source == "magnitude"
+              else _depth_candidates(m, k, n, mode, max_depth, align))
     for cand_impl in _impl_candidates(mode, impl, backend, accuracy,
                                       mode_pinned, rounding):
-        for depth in _depth_candidates(m, k, n, mode, max_depth, align):
+        for depth in depths:
             est = cost_lib.estimate(
                 m, k, n, mode, cand_impl, depth, align=align,
                 peak_flops=balance.peak_flops, hbm_bw=balance.hbm_bw,
@@ -426,7 +472,8 @@ def plan_matmul(
         align=align,
         source=source,
         t_resolved_s=rank[0],
-        block=block if chosen_impl == "pallas" else None,
+        block=block if chosen_impl in ("pallas", "tile") else None,
+        map_source=map_source,
     )
     _PLAN_CACHE[key] = plan
     return plan
@@ -453,6 +500,14 @@ def execute(plan: Plan, a, b):
             f"operands {tuple(a_shape)} @ "
             f"{tuple(b.shape if not isinstance(b, DoubleF32) else b.hi.shape)} "
             f"do not match plan {plan.shape_a} @ {plan.shape_b}"
+        )
+    if plan.map_source == "magnitude":
+        from repro.kernels.tile_matmul import ops as tile_ops
+
+        bm, bn, bk = plan.block if plan.block is not None else tile_ops.DEFAULT_BLOCK
+        return tile_ops.tile_matmul_auto(
+            a, b, plan.accuracy, max_mode=plan.mode, rounding=plan.rounding,
+            bm=bm, bn=bn, bk=bk,
         )
     mm = functools.partial(
         rmpm.mp_matmul, mode=plan.mode, rounding=plan.rounding, impl=plan.impl,
@@ -484,6 +539,7 @@ def matmul(
     rounding: str = "rne",
     max_depth: int = _MAX_DEPTH_DEFAULT,
     tune_table: Any = None,
+    map_source: str = "uniform",
 ) -> Array:
     """Plan-and-execute convenience: ``matmul(a, b, accuracy=2**-12)``."""
     dtype = _DF32 if isinstance(a, DoubleF32) or isinstance(b, DoubleF32) else "float32"
@@ -500,6 +556,7 @@ def matmul(
         rounding=rounding,
         max_depth=max_depth,
         tune_table=tune_table,
+        map_source=map_source,
     )
     return execute(plan, a, b)
 

@@ -8,8 +8,11 @@ max-abs error vs a float64 reference.  The result is a :class:`TuneTable`
 hand-entered roofline constants (DESIGN.md section Autotuner).
 
 The candidate space mirrors the planner's own (planner._impl_candidates /
-_depth_candidates): 'native'+'xla' off-TPU, 'xla'+'pallas' (with a block
-grid) on TPU, depths gated by ``align * 2**depth`` fitting the shape.
+_depth_candidates): 'native'+'xla' off-TPU, 'xla'+'pallas'+'tile' (with a
+block grid for both kernels) on TPU, depths gated by ``align * 2**depth``
+fitting the shape.  'tile' is the partitioned-SIMD kernel run with a uniform
+map — measuring it against 'pallas' lets the planner decide from data
+whether the per-tile predication costs anything on a given machine.
 """
 
 from __future__ import annotations
@@ -69,7 +72,7 @@ def candidates(
 ) -> list[Candidate]:
     """The measurable candidate space for one shape on one backend."""
     if impls is None:
-        impls = ("xla", "pallas") if backend == "tpu" else ("native", "xla")
+        impls = ("xla", "pallas", "tile") if backend == "tpu" else ("native", "xla")
     out: list[Candidate] = []
     for depth in depth_candidates(m, k, n, max_depth, align):
         for impl in impls:
@@ -83,6 +86,11 @@ def candidates(
                         continue  # fused extraction needs >= 2 resident limbs
                     for blk in blocks:
                         out.append(Candidate(mode, "pallas", depth, blk))
+                elif impl == "tile":
+                    # uniform-map tile kernel: same fused datapath, every
+                    # f32 mode (a 1-limb map still beats a switch dispatch)
+                    for blk in blocks:
+                        out.append(Candidate(mode, "tile", depth, blk))
                 else:
                     out.append(Candidate(mode, impl, depth))
     return out

@@ -52,7 +52,7 @@ class TuneRecord:
     k: int
     n: int
     mode: str  # Mode name, or NATIVE_MODE_KEY for impl='native'
-    impl: str  # 'native' | 'xla' | 'pallas'
+    impl: str  # 'native' | 'xla' | 'pallas' | 'tile'
     depth: int  # Strassen depth
     wall_us: float  # median wall time
     flops_per_s: float  # achieved useful rate: 2*m*k*n / wall
