@@ -16,6 +16,11 @@ noise profile:
   microbenchmarks (~ms).  Too contention-sensitive for hosted CI at tight
   tolerances — meant for same-machine, before/after comparisons (pair with
   ``plan_sweep --stat min``).
+* **page** (``--page-new``): machine-independent *semantic* invariants of
+  the paged-KV-cache sweep (paged bit-identical to dense at full precision
+  including the ring-wrap/COW cell, strictly more in-flight concurrency
+  than the dense-equivalent pool admits, prefix pages shared, tiered
+  residual inside its budget) — no wall-clock cells at all.
 * **adapt** (``--adapt-new``): machine-independent *semantic* invariants of
   the runtime-adaptation sweep (adapted meets its SLO, the cheap static
   plan violates it, reconfiguration happened with zero recompiles) — the
@@ -332,6 +337,88 @@ def tile_semantics(doc: dict) -> list[str]:
     return problems
 
 
+def page_semantics(doc: dict) -> list[str]:
+    """Machine-independent invariants of a fresh BENCH_page.json — the
+    paged-KV-cache contract (repro.serve.paged), never a wall-clock ratio:
+
+      * every full-precision exact cell is token-for-token identical to the
+        dense ring layout, and the hybrid wrap cell actually forked pages
+        (cow_copies > 0) — otherwise ring wrap into shared pages went
+        unexercised;
+      * the concurrency cell stays exact while sustaining strictly more
+        concurrent in-flight requests than a dense layout of the same
+        memory admits (``peak_active > dense_equiv_slots``) with real
+        page-pressure evictions;
+      * the sharing cell stays exact with shared_hits > 0 and a nonzero
+        peak sharing ratio;
+      * tier cells: ``off`` stays exact; ``open`` demotes pages and
+        measures a nonzero residual; ``budgeted`` holds the measured
+        residual inside its budget (``budget_met``).
+
+    Returns a list of violation strings (empty = pass).
+    """
+    problems = []
+    exact = doc.get("exact", [])
+    if not exact:
+        return ["no page exact cells found"]
+    for c in exact:
+        if not c.get("exact_match"):
+            problems.append(
+                f"exact {c.get('arch')}: paged output diverged from dense "
+                "at full precision")
+    wrap = [c for c in exact if c.get("wrap_cow")]
+    if not wrap:
+        problems.append("no exact cell covers ring wrap (hybrid arch)")
+    elif not any(c.get("cow_copies", 0) > 0 for c in wrap):
+        problems.append(
+            "wrap cell never forked a page: copy-on-write unexercised")
+    conc = doc.get("concurrency")
+    if not conc:
+        problems.append("no concurrency cell found")
+    else:
+        if not conc.get("exact_match"):
+            problems.append("concurrency: output diverged under page "
+                            "pressure (eviction corrupted state)")
+        if not (conc.get("peak_active", 0)
+                > conc.get("dense_equiv_slots", 1 << 30)):
+            problems.append(
+                f"concurrency: peak_active {conc.get('peak_active')} not "
+                f"above dense-equivalent {conc.get('dense_equiv_slots')} — "
+                "paging buys no concurrency")
+        if conc.get("page_evictions", 0) < 1:
+            problems.append("concurrency: no page-pressure eviction "
+                            "happened (the pool is not actually small)")
+    sh = doc.get("sharing")
+    if not sh:
+        problems.append("no sharing cell found")
+    else:
+        if not sh.get("exact_match"):
+            problems.append("sharing: output diverged with shared prefixes")
+        if sh.get("shared_hits", 0) < 1 or not sh.get("sharing_peak", 0) > 0:
+            problems.append("sharing: no prefix pages were actually shared")
+    tiers = {c.get("label"): c for c in doc.get("tiers", [])}
+    for want in ("off", "open", "budgeted"):
+        if want not in tiers:
+            problems.append(f"no {want} tier cell found")
+    off, open_, bud = (tiers.get(k) for k in ("off", "open", "budgeted"))
+    if off is not None and not off.get("exact_match"):
+        problems.append("tiers off: output diverged without any demotion")
+    if open_ is not None:
+        if open_.get("tier_demoted", 0) < 1:
+            problems.append("tiers open: no page was demoted")
+        if not (open_.get("err_max") or 0) > 0:
+            problems.append("tiers open: demotion left no measured residual "
+                            "(truncation is inert)")
+    if bud is not None:
+        if bud.get("budget") is None:
+            problems.append("tiers budgeted: cell carries no budget")
+        if not bud.get("budget_met"):
+            problems.append(
+                f"tiers budgeted: residual {bud.get('err_max')} over "
+                f"budget {bud.get('budget')}")
+    return problems
+
+
 def compare(
     baseline: dict[tuple, float],
     new: dict[tuple, float],
@@ -443,6 +530,15 @@ def main(argv: list[str] | None = None) -> int:
         "recompiles, magnitude maps inside budget with pass_ratio < 1)",
     )
     ap.add_argument(
+        "--page-new",
+        default="",
+        help="fresh BENCH_page.json; checked for the machine-independent "
+        "paged-KV-cache invariants (paged bit-identical to dense at full "
+        "precision incl. the wrap+COW cell, in-flight concurrency above "
+        "the dense-equivalent admission with real evictions, prefix pages "
+        "shared, tiered residual inside budget)",
+    )
+    ap.add_argument(
         "--adapt-strict",
         action="store_true",
         help="also fail on the adapted-vs-safe throughput invariant "
@@ -519,6 +615,16 @@ def main(argv: list[str] | None = None) -> int:
             print("tile (semantics): ok (uniform maps bitwise-equal, one "
                   "fused dispatch with zero switches/recompiles, magnitude "
                   "maps inside budget at pass_ratio < 1)")
+        ok &= not problems
+    if args.page_new:
+        ran = True
+        problems = page_semantics(load(args.page_new))
+        for p in problems:
+            print(f"page (semantics): FAIL {p}")
+        if not problems:
+            print("page (semantics): ok (paged bit-identical to dense incl. "
+                  "wrap+COW, concurrency beats dense-equivalent admission "
+                  "under eviction, prefixes shared, tiers inside budget)")
         ok &= not problems
     if args.spec_new:
         ran = True

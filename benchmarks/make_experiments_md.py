@@ -3,7 +3,8 @@ BENCH_plan.json (benchmarks/plan_sweep.py), the tuner's measured-vs-modeled
 comparison from BENCH_tune.json (benchmarks/tune_sweep.py), the serve sweep
 from BENCH_serve.json (benchmarks/serve_sweep.py), the runtime-adaptation
 sweep from BENCH_adapt.json (benchmarks/adapt_sweep.py), the tile-kernel
-sweep from BENCH_tile.json (benchmarks/tile_sweep.py) and, when present,
+sweep from BENCH_tile.json (benchmarks/tile_sweep.py), the paged-KV-cache
+sweep from BENCH_page.json (benchmarks/page_sweep.py) and, when present,
 the dry-run + roofline tables from experiments/dryrun/*.json.
 
     PYTHONPATH=src python -m benchmarks.plan_sweep          # produce BENCH_plan.json
@@ -29,6 +30,7 @@ BENCH_ADAPT = os.path.join(os.path.dirname(__file__), "..", "BENCH_adapt.json")
 BENCH_SPEC = os.path.join(os.path.dirname(__file__), "..", "BENCH_spec.json")
 BENCH_TENANT = os.path.join(os.path.dirname(__file__), "..", "BENCH_tenant.json")
 BENCH_TILE = os.path.join(os.path.dirname(__file__), "..", "BENCH_tile.json")
+BENCH_PAGE = os.path.join(os.path.dirname(__file__), "..", "BENCH_page.json")
 EXPERIMENTS_MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
 BEGIN_MARK = "<!-- BEGIN GENERATED (benchmarks/make_experiments_md.py) -->"
 END_MARK = "<!-- END GENERATED -->"
@@ -467,6 +469,70 @@ def tile_section() -> list[str]:
     ]
 
 
+def load_bench_page(path: str = BENCH_PAGE) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def page_table(doc: dict) -> list[str]:
+    out = ["| cell | exact | detail |",
+           "|---|---|---|"]
+    for c in doc.get("exact", []):
+        wrap = " +wrap/COW" if c.get("wrap_cow") else ""
+        out.append(
+            f"| exact {c['arch']}{wrap} "
+            f"| {'yes' if c['exact_match'] else '**no**'} "
+            f"| shared_hits={c['shared_hits']} cow={c['cow_copies']} "
+            f"occ_peak={c['occupancy_peak']:.2f} |")
+    c = doc.get("concurrency")
+    if c:
+        out.append(
+            f"| concurrency | {'yes' if c['exact_match'] else '**no**'} "
+            f"| peak_active={c['peak_active']} > "
+            f"dense_equiv={c['dense_equiv_slots']} "
+            f"({c['slots']} slots), evictions={c['page_evictions']} |")
+    c = doc.get("sharing")
+    if c:
+        out.append(
+            f"| sharing | {'yes' if c['exact_match'] else '**no**'} "
+            f"| shared_hits={c['shared_hits']} "
+            f"peak_ratio={c['sharing_peak']:.2f} |")
+    for c in doc.get("tiers", []):
+        err = "-" if c["err_max"] is None else f"{c['err_max']:.1e}"
+        bud = "-" if c["budget"] is None else f"{c['budget']:.1e}"
+        exact = ("yes" if c["exact_match"]
+                 else f"{c['tokens_changed']}/{c['requests']} changed")
+        out.append(
+            f"| tiers {c['label']} | {exact} "
+            f"| levels={c['levels']} err_max={err} budget={bud} "
+            f"(met: {'yes' if c['budget_met'] else '**no**'}) "
+            f"demoted={c['tier_demoted']} mix={c['tier_mix']} |")
+    return out
+
+
+def page_section() -> list[str]:
+    doc = load_bench_page()
+    if doc is None:
+        return ["### Page sweep\n",
+                "_BENCH_page.json not found — run "
+                "`python -m benchmarks.page_sweep` first._\n"]
+    return [
+        f"### Page sweep (BENCH_page.json, host={doc['host_backend']}, "
+        f"page_size={doc['page_size']})\n",
+        "Paged KV cache (`repro.serve.paged`): page-table pools with "
+        "admission gating, page-pressure eviction, prompt-prefix sharing "
+        "(copy-on-write forks) and precision-tiered cold pages.  At full "
+        "precision every cell is token-identical to the dense ring layout "
+        "— the hybrid cell decodes past its local window so ring wrap "
+        "forces COW mid-run — while a pool smaller than the slot array "
+        "sustains more in-flight requests than dense admission allows:\n",
+        "\n".join(page_table(doc)),
+        "",
+    ]
+
+
 def generated_sections() -> str:
     parts: list[str] = []
     doc = load_bench_plan()
@@ -494,6 +560,7 @@ def generated_sections() -> str:
     parts.extend(spec_section())
     parts.extend(tenant_section())
     parts.extend(tile_section())
+    parts.extend(page_section())
     recs = load("paper_baseline")
     if recs:
         n_ok = sum(1 for r in recs.values() if r["status"] == "ok")

@@ -1,0 +1,219 @@
+"""Paged-KV-cache sweep: exactness, concurrency-beyond-dense, sharing, tiers.
+
+Drives ``repro.serve`` with ``CacheConfig(layout="paged")`` against the
+dense ring layout on identical seeded workloads and records the paged
+cache's four claims as machine-independent cells (``BENCH_page.json``):
+
+  * **exact**: at full precision the paged layout is token-for-token
+    identical to dense for each architecture family (dense attention, SSM,
+    hybrid local-window — the hybrid cell decodes past its window so ring
+    wrap + prefix-shared pages force copy-on-write forks mid-run);
+  * **concurrency**: with a page pool holding fewer full rows than there
+    are slots, admission gating + page-pressure eviction sustain strictly
+    more concurrent in-flight requests than a dense layout of the same
+    memory could admit at all — tokens still bit-identical;
+  * **sharing**: requests with a common prompt prefix attach the same
+    physical pages read-only (shared_hits > 0, sharing ratio > 0) and
+    still match dense exactly;
+  * **tiers**: precision-tiered pages (mantissa truncation of cold pages
+    in place).  The open-loop cell demotes at full ladder depth and
+    records the measured residual; the budgeted cell must keep the
+    residual inside its budget (the closed loop from repro.adapt).
+
+The gate (``check_regression --page-new``) asserts all of the above from
+the JSON alone — no wall-clock cells, so it runs identically on any host.
+
+    PYTHONPATH=src python -m benchmarks.page_sweep            # full sweep
+    PYTHONPATH=src python -m benchmarks.page_sweep --quick    # CI subset
+    PYTHONPATH=src python -m benchmarks.make_experiments_md --write
+
+Emits ``BENCH_page.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.serve_sweep import build_tiny
+from repro.adapt import PageTierPolicy
+from repro.configs import get_smoke_config
+from repro.core.policy import NATIVE_F32
+from repro.models import build_model
+from repro.serve import CacheConfig, Request, ServeConfig, ServeEngine
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_page.json")
+
+PAGE_SIZE = 4
+#: one arch per KV-state family; the hybrid cell is the only one whose
+#: local-window cache (cap = window < max_len) ring-wraps mid-decode, so it
+#: is the cell that exercises wrap + COW (the scheduler's budget clamp keeps
+#: the global cache from ever wrapping)
+EXACT_ARCHS = ("qwen1.5-0.5b", "mamba2-2.7b", "recurrentgemma-9b")
+QUICK_ARCHS = ("qwen1.5-0.5b", "recurrentgemma-9b")
+
+
+def _requests(vocab: int, n: int, prompt_len: int, max_new: int,
+              shared_prefix=None) -> list[Request]:
+    rng = np.random.default_rng(0)
+    out = []
+    for i in range(n):
+        if shared_prefix is not None:
+            prompt = list(shared_prefix) + [i % vocab]
+        else:
+            prompt = rng.integers(0, vocab, size=prompt_len).tolist()
+        out.append(Request(prompt, max_new, rid=i))
+    return out
+
+
+def _run(model, params, reqs, **cfg_kw):
+    eng = ServeEngine(model, params, config=ServeConfig(**cfg_kw))
+    return eng.generate_batch(reqs), eng
+
+
+def exact_cell(arch: str) -> dict:
+    """Paged vs dense on an identical workload; the hybrid arch decodes past
+    its local window so the cell also covers wrap-into-shared-pages COW."""
+    cfg, model, params = build_tiny(arch)
+    hybrid = arch == "recurrentgemma-9b"
+    mk = lambda: _requests(cfg.vocab, n=3, prompt_len=8,
+                           max_new=30 if hybrid else 8,
+                           shared_prefix=[7] * 8 if hybrid else None)
+    max_len = 48 if hybrid else 24
+    dense, _ = _run(model, params, mk(), batch_slots=3, max_len=max_len)
+    paged, eng = _run(model, params, mk(), batch_slots=3, max_len=max_len,
+                      cache=CacheConfig(layout="paged", page_size=PAGE_SIZE))
+    s = eng.metrics.summary()["pages"]
+    return {
+        "arch": arch,
+        "requests": len(dense),
+        "exact_match": paged == dense,
+        "wrap_cow": hybrid,
+        "shared_hits": s["shared_hits"],
+        "cow_copies": s["cow_copies"],
+        "occupancy_peak": s["occupancy_peak"],
+    }
+
+
+def concurrency_cell() -> dict:
+    """Pool of 8 pages / 3 pages-per-row = 2 dense-equivalent slots; 4 slots
+    and 6 requests must still finish bit-identical, with real evictions and
+    peak concurrency above what dense admission could grant."""
+    cfg, model, params = build_tiny("qwen1.5-0.5b")
+    mk = lambda: _requests(cfg.vocab, n=6, prompt_len=4, max_new=7)
+    dense, _ = _run(model, params, mk(), batch_slots=4, max_len=12)
+    paged, eng = _run(
+        model, params, mk(), batch_slots=4, max_len=12,
+        cache=CacheConfig(layout="paged", page_size=PAGE_SIZE, pool_pages=8,
+                          prefix_sharing=False))
+    s = eng.metrics.summary()
+    return {
+        "requests": len(dense),
+        "exact_match": paged == dense,
+        "slots": 4,
+        "dense_equiv_slots": s["pages"]["dense_equiv_slots"],
+        "peak_active": s["peak_active"],
+        "page_evictions": s["pages"]["page_evictions"],
+        "preemptions": s["preemptions"],
+    }
+
+
+def sharing_cell() -> dict:
+    """Identical prompt prefixes attach the same physical pages."""
+    cfg, model, params = build_tiny("qwen1.5-0.5b")
+    mk = lambda: _requests(cfg.vocab, n=3, prompt_len=9, max_new=6,
+                           shared_prefix=[7] * 8)
+    dense, _ = _run(model, params, mk(), batch_slots=3, max_len=20)
+    paged, eng = _run(model, params, mk(), batch_slots=3, max_len=20,
+                      cache=CacheConfig(layout="paged", page_size=PAGE_SIZE))
+    s = eng.metrics.summary()["pages"]
+    return {
+        "requests": 3,
+        "exact_match": paged == dense,
+        "shared_hits": s["shared_hits"],
+        "sharing_peak": s["sharing_peak"],
+    }
+
+
+def tier_cell(label: str, policy: PageTierPolicy | None) -> dict:
+    """One tier-policy endpoint on a long-decode workload: ``off`` must stay
+    exact; ``open`` demotes at full depth (the memory-vs-accuracy
+    endpoint); ``budgeted`` must hold the measured residual inside its
+    budget."""
+    cfg, model, params = build_tiny("qwen1.5-0.5b")
+    mk = lambda: _requests(cfg.vocab, n=3, prompt_len=8, max_new=12)
+    dense, _ = _run(model, params, mk(), batch_slots=3, max_len=28)
+    paged, eng = _run(
+        model, params, mk(), batch_slots=3, max_len=28,
+        cache=CacheConfig(layout="paged", page_size=PAGE_SIZE,
+                          tier_policy=policy))
+    s = eng.metrics.summary()["pages"]
+    changed = sum(1 for rid in dense if paged.get(rid) != dense[rid])
+    budget = policy.budget if policy else None
+    err = s["tier_err_max"]
+    return {
+        "label": label,
+        "levels": list(policy.levels) if policy else None,
+        "budget": budget,
+        "exact_match": paged == dense,
+        "tokens_changed": changed,
+        "requests": len(dense),
+        "tier_ticks": s["tier_ticks"],
+        "tier_demoted": s["tier_demoted"],
+        "tier_promoted": s["tier_promoted"],
+        "err_max": err,
+        "budget_met": budget is None or (err is not None and err <= budget),
+        "tier_mix": s["tier_mix"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI subset: dense + hybrid exact cells only")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    archs = QUICK_ARCHS if args.quick else EXACT_ARCHS
+    doc = {
+        "host_backend": jax.default_backend(),
+        "page_size": PAGE_SIZE,
+        "exact": [],
+        "tiers": [],
+    }
+    for arch in archs:
+        c = exact_cell(arch)
+        doc["exact"].append(c)
+        print(f"exact {arch}: match={c['exact_match']} "
+              f"cow={c['cow_copies']} hits={c['shared_hits']}")
+    c = concurrency_cell()
+    doc["concurrency"] = c
+    print(f"concurrency: match={c['exact_match']} "
+          f"peak_active={c['peak_active']} > dense_equiv="
+          f"{c['dense_equiv_slots']} evictions={c['page_evictions']}")
+    c = sharing_cell()
+    doc["sharing"] = c
+    print(f"sharing: match={c['exact_match']} hits={c['shared_hits']} "
+          f"peak={c['sharing_peak']:.3f}")
+    tiers = [("off", None),
+             ("open", PageTierPolicy(levels=(5, 3), cold_after=4, every=2)),
+             ("budgeted", PageTierPolicy(levels=(6, 4), cold_after=4,
+                                         every=2, budget=0.05))]
+    for label, pol in tiers:
+        c = tier_cell(label, pol)
+        doc["tiers"].append(c)
+        err = "-" if c["err_max"] is None else f"{c['err_max']:.2e}"
+        print(f"tiers {label}: err_max={err} met={c['budget_met']} "
+              f"demoted={c['tier_demoted']} mix={c['tier_mix']}")
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,10 @@ from repro.adapt.controller import (  # noqa: F401
     HysteresisController,
     TrainPrecisionSchedule,
 )
+from repro.adapt.pages import (  # noqa: F401
+    PageTierController,
+    PageTierPolicy,
+)
 from repro.adapt.probe import (  # noqa: F401
     GradDriftProbe,
     logit_residual,

@@ -119,6 +119,30 @@ def main() -> None:
     ap.add_argument("--scheduler-policy", default="priority",
                     choices=("priority", "fifo"),
                     help="scheduler for --multi-tenant (default: priority)")
+    ap.add_argument("--paged", action="store_true",
+                    help="page-table KV cache (repro.serve.paged): admission "
+                         "gated on free pages, eviction under page pressure, "
+                         "prefix sharing — bit-identical tokens at full "
+                         "precision")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool budget for the largest cache group "
+                         "(0 = memory-equivalent to the dense layout)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable read-only prompt-prefix page sharing")
+    ap.add_argument("--tier-levels", default="",
+                    help="comma-separated keep-bits ladder for precision-"
+                         "tiered pages, e.g. '5,3' (empty = tiers off; "
+                         "requires --paged and a bf16 KV cache)")
+    ap.add_argument("--tier-cold-after", type=int, default=32,
+                    help="tokens behind the decode head before a page is "
+                         "demotion-eligible")
+    ap.add_argument("--tier-every", type=int, default=8,
+                    help="decode steps between tier ticks")
+    ap.add_argument("--tier-budget", type=float, default=0.0,
+                    help="closed-loop residual budget for the tier "
+                         "controller (0 = open loop at full depth)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -153,28 +177,13 @@ def main() -> None:
     else:
         reqs = ragged_requests(args.requests, cfg.vocab, args.prompt_len,
                                args.max_new, rng)
-    slots = args.slots or max(args.requests, 1)
-    max_len = args.prompt_len + args.max_new + 8
-    slo = None
-    if args.adapt:
-        from repro.adapt import SLO
+    # the grouped config path (ServeConfig.from_flags) — the documented way
+    # to construct an engine; all launcher flags route through it
+    from repro.serve import ServeConfig
 
-        slo = SLO(max_err=args.slo_err, target_ms=args.slo_ms or None)
-    speculate = None
-    if args.speculate:
-        from repro.spec import SpecConfig
-
-        speculate = SpecConfig(k=args.draft_k, draft_shift=args.draft_shift)
     eng = ServeEngine(
-        model, params, batch_slots=slots, max_len=max_len,
-        accuracy=args.accuracy,
-        prefill_tokens=max(args.prompt_len // 2, 1),
-        tune_table=args.tune_table or None,
-        slo=slo, adapt_every=args.adapt_every,
-        speculate=speculate,
-        tenants=tenants, classes=classes,
-        scheduler_policy=args.scheduler_policy,
-    )
+        model, params,
+        config=ServeConfig.from_flags(args, tenants=tenants, classes=classes))
     t0 = time.perf_counter()
     outs = run_open_loop(eng, reqs, args.arrival_rate, rng)
     dt = time.perf_counter() - t0
@@ -192,8 +201,10 @@ def main() -> None:
           f"{stats.hits} hits / {stats.misses} misses (process-wide)")
     total = sum(len(v) for v in outs.values())
     print(f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl compile; "
-          f"kv={cfg.kv_cache_dtype}; slots={slots})")
+          f"kv={cfg.kv_cache_dtype}; slots={eng.config.batch_slots})")
     print(eng.metrics.format_summary())
+    if args.paged:
+        print(f"cache: {eng.describe_cache()}")
     if args.multi_tenant:
         print(f"tenancy:\n{eng.describe_tenancy()}")
 

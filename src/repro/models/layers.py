@@ -289,6 +289,166 @@ def kv_cache_append_slots(cache: KVCache, k_new: Array, v_new: Array) -> KVCache
     return jax.vmap(_kv_append_row)(cache, k_new, v_new)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (fixed-size pages in a shared pool, per-row page tables —
+# the serving-side layout behind repro.serve.paged.PagedLayout).  Virtual
+# addressing preserves the dense ring semantics bit-for-bit: virtual slot v
+# of row b lives at pool[page_tbl[b, v // page], v % page], so append/view
+# reproduce exactly the (B, cap, Hkv, hd) arrays the dense cache would hold.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedKVCache:
+    """Page-table KV cache node (always per-slot / continuous batching).
+
+    ``k_pool``/``v_pool`` are shared across rows: (P, page, Hkv, hd) with
+    page index 0 reserved as a scratch page — unmapped table entries (-1)
+    clamp to it, so appends from inactive rows (whose tables the engine has
+    cleared) land in scratch instead of corrupting live pages.  ``page_tbl``
+    is (B, n_pages) int32 (-1 = unmapped); ``pos``/``length`` keep the exact
+    dense per-slot semantics (pos (B, cap) global positions, -1 empty).
+    """
+
+    k_pool: Array  # (P, page, Hkv, hd) bf16 or int8
+    v_pool: Array
+    k_scale: Array | None  # (P, page, Hkv, 1) f32 when int8
+    v_scale: Array | None
+    page_tbl: Array  # (B, n_pages) int32, -1 = unmapped (-> scratch page 0)
+    pos: Array  # (B, cap) int32 global positions (-1 empty)
+    length: Array  # (B,) int32 total tokens ever appended per row
+
+
+def paged_cache_init(batch: int, cap: int, n_kv: int, hd: int, dtype: str,
+                     n_pages: int, page_size: int) -> PagedKVCache:
+    """Build an empty paged cache: ``n_pages`` usable pages (+1 scratch) of
+    ``page_size`` tokens; ``cap`` is the per-row virtual capacity (the dense
+    cache's Smax — ring wrap happens in virtual space)."""
+    per_row = -(-cap // page_size)
+    if n_pages < per_row:
+        raise ValueError(
+            f"pool of {n_pages} pages cannot hold one full row "
+            f"(cap={cap}, page_size={page_size} -> {per_row} pages/row)")
+    tbl = jnp.full((batch, per_row), -1, jnp.int32)
+    pos = jnp.full((batch, cap), -1, jnp.int32)
+    length = jnp.zeros((batch,), jnp.int32)
+
+    def z(dt):
+        return jnp.zeros((n_pages + 1, page_size, n_kv, hd), dt)
+
+    if dtype == "int8":
+        def sc():
+            return jnp.zeros((n_pages + 1, page_size, n_kv, 1), jnp.float32)
+
+        return PagedKVCache(z(jnp.int8), z(jnp.int8), sc(), sc(), tbl, pos, length)
+    return PagedKVCache(z(jnp.bfloat16), z(jnp.bfloat16), None, None, tbl, pos,
+                        length)
+
+
+def _paged_addr(cache: PagedKVCache, vi: Array) -> tuple[Array, Array]:
+    """Virtual indices (B, S) -> (pool page, in-page offset), clamping
+    unmapped entries to the scratch page."""
+    ps = cache.k_pool.shape[1]
+    pages = jnp.take_along_axis(cache.page_tbl, vi // ps, axis=1)
+    return jnp.maximum(pages, 0), vi % ps
+
+
+def paged_append(cache: PagedKVCache, k_new: Array, v_new: Array) -> PagedKVCache:
+    """Per-row ring append through the page table.  Mirrors
+    ``kv_cache_append_slots`` exactly in virtual space (same cast, same int8
+    row quantization, same pos/length updates); multi-token appends must not
+    straddle the virtual wrap point, same as the dense contract."""
+    cap = cache.pos.shape[1]
+    b, s_new = k_new.shape[:2]
+    slot = jax.lax.rem(cache.length, cap)  # (B,)
+    vi = slot[:, None] + jnp.arange(s_new, dtype=jnp.int32)  # (B, S)
+    rows = jnp.arange(b)[:, None]
+    pos = cache.pos.at[rows, vi].set(
+        cache.length[:, None] + jnp.arange(s_new, dtype=jnp.int32))
+    pages, off = _paged_addr(cache, vi)
+    total = cache.length + s_new
+    if cache.k_scale is not None:
+        kq, ks = _quant_rows(k_new)
+        vq, vs = _quant_rows(v_new)
+        return PagedKVCache(
+            cache.k_pool.at[pages, off].set(kq),
+            cache.v_pool.at[pages, off].set(vq),
+            cache.k_scale.at[pages, off].set(ks),
+            cache.v_scale.at[pages, off].set(vs),
+            cache.page_tbl, pos, total,
+        )
+    return PagedKVCache(
+        cache.k_pool.at[pages, off].set(k_new.astype(cache.k_pool.dtype)),
+        cache.v_pool.at[pages, off].set(v_new.astype(cache.v_pool.dtype)),
+        None, None, cache.page_tbl, pos, total,
+    )
+
+
+def paged_view(cache: PagedKVCache) -> tuple[Array, Array, Array | None, Array | None]:
+    """Materialize the dense (B, cap, Hkv, hd) view the attention kernel
+    reads: gather pages by table, flatten, trim to the virtual capacity.
+    Unmapped entries read the scratch page — garbage there is masked by
+    ``pos == -1`` in flash_attention, so the view is bit-identical to the
+    dense cache wherever positions are valid."""
+    cap = cache.pos.shape[1]
+    npg, ps = cache.page_tbl.shape[1], cache.k_pool.shape[1]
+    b = cache.page_tbl.shape[0]
+    tbl = jnp.maximum(cache.page_tbl, 0)
+
+    def view(pool):
+        if pool is None:
+            return None
+        return pool[tbl].reshape(b, npg * ps, *pool.shape[2:])[:, :cap]
+
+    return view(cache.k_pool), view(cache.v_pool), view(cache.k_scale), view(cache.v_scale)
+
+
+def paged_scatter_rows(cache: PagedKVCache, k: Array, v: Array,
+                       k_scale: Array | None, v_scale: Array | None,
+                       pos: Array, length: Array) -> PagedKVCache:
+    """Write every row's full (B, cap, ...) virtual content back through the
+    page table — the inverse of ``paged_view``, used by the speculative
+    rollback to restore rejected writes.  Rows whose table entries are
+    unmapped write the scratch page (inactive rows are harmless); rows
+    sharing a page write identical bits (shared prefix pages are fully
+    settled before any speculative round), so duplicate scatters are
+    order-independent."""
+    cap = cache.pos.shape[1]
+    b = cache.page_tbl.shape[0]
+    vi = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), (b, cap))
+    pages, off = _paged_addr(cache, vi)
+
+    def put(pool, vals):
+        if pool is None:
+            return None
+        return pool.at[pages, off].set(vals.astype(pool.dtype))
+
+    return PagedKVCache(
+        put(cache.k_pool, k), put(cache.v_pool, v),
+        put(cache.k_scale, k_scale), put(cache.v_scale, v_scale),
+        cache.page_tbl, pos, length,
+    )
+
+
+def kv_append(cache: KVCache | PagedKVCache, k_new: Array, v_new: Array):
+    """Layout dispatch for cache appends (the KVLayout seam): paged nodes
+    scatter through their page table, dense per-slot nodes ((B,) lengths)
+    ring-append per row, shared-length nodes append at one scalar offset."""
+    if isinstance(cache, PagedKVCache):
+        return paged_append(cache, k_new, v_new)
+    if cache.length.ndim == 1:
+        return kv_cache_append_slots(cache, k_new, v_new)
+    return kv_cache_append(cache, k_new, v_new)
+
+
+def kv_view(cache: KVCache | PagedKVCache):
+    """The (k, v, k_scale, v_scale) arrays attention reads for this node."""
+    if isinstance(cache, PagedKVCache):
+        return paged_view(cache)
+    return cache.k, cache.v, cache.k_scale, cache.v_scale
+
+
 def _dequant_chunk(x: Array, scale: Array | None) -> Array:
     if scale is None:
         return x.astype(jnp.float32)
@@ -419,11 +579,11 @@ def attention_apply(
     cfg,
     *,
     positions: Array | None = None,
-    cache: KVCache | None = None,
+    cache: KVCache | PagedKVCache | None = None,
     window: int = 0,
     causal: bool = True,
     kv_override: tuple[Array, Array] | None = None,  # cross-attention KV
-) -> tuple[Array, KVCache | None]:
+) -> tuple[Array, KVCache | PagedKVCache | None]:
     policy = cfg.policy
     b, s, _ = x.shape
     hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
@@ -459,14 +619,13 @@ def attention_apply(
         causal = False
 
     if cache is not None and kv_override is None:
-        per_slot = cache.length.ndim == 1  # (B,) lengths: continuous batching
         q_offset = cache.length
-        cache = (kv_cache_append_slots if per_slot else kv_cache_append)(cache, k, v)
+        cache = kv_append(cache, k, v)  # KVLayout dispatch (paged/per-slot/shared)
         if s > 1:
             # prefill: attend over the fresh full-length K/V (the window
             # cache may be smaller than the prompt; it keeps only the tail)
             fresh_pos = jnp.arange(s, dtype=jnp.int32)
-            fresh_pos = (q_offset[:, None] if per_slot else jnp.asarray(q_offset)) + fresh_pos
+            fresh_pos = (q_offset[:, None] if q_offset.ndim else jnp.asarray(q_offset)) + fresh_pos
             out = flash_attention(
                 q, k, v, policy, causal=causal, window=window,
                 q_offset=q_offset,
@@ -474,17 +633,18 @@ def attention_apply(
                 chunk=cfg.attn_chunk,
             )
         else:
+            k_read, v_read, ks_read, vs_read = kv_view(cache)
             out = flash_attention(
                 q,
-                cache.k,
-                cache.v,
+                k_read,
+                v_read,
                 policy,
                 causal=causal,
                 window=window,
                 q_offset=q_offset,
                 kv_positions=cache.pos,
-                k_scale=cache.k_scale,
-                v_scale=cache.v_scale,
+                k_scale=ks_read,
+                v_scale=vs_read,
                 chunk=cfg.attn_chunk,
             )
     else:

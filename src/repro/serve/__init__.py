@@ -7,19 +7,39 @@
                   per-tenant accuracy budget, step-unit deadlines
     engine.py     masked compiled step over the fixed slot array + streaming
                   API; preemption parks/resumes exact state rows
+    config.py     ServeConfig — the frozen grouped construction surface
+                  (SchedulingConfig / AdaptConfig / SpecConfig / CacheConfig)
+    paged.py      KVLayout protocol: DenseLayout (per-slot ring, default)
+                  and PagedLayout (page-table pools, precision-tiered pages,
+                  prefix sharing with copy-on-write)
     metrics.py    tok/s, TTFT, latency, slot occupancy, plan-cache hits,
                   speculative acceptance, per-tenant SLO attainment /
-                  fairness (share vs entitlement)
+                  fairness (share vs entitlement), page occupancy / tier mix
 
-``ServeEngine(slo=...)`` closes the runtime-precision loop (repro.adapt);
-``ServeEngine(speculate=SpecConfig(...))`` runs self-speculative decode
-rounds (repro.spec); ``ServeEngine(tenants=[...], classes=[...])`` turns on
-multi-tenant priority scheduling (with ``slo=`` each tenant gets a private
-mode table + controller).  See DESIGN.md sections Serving / Runtime
-adaptation / Speculative decoding / Multi-tenant scheduling.
+``ServeEngine(model, params, config=ServeConfig(...))`` is the documented
+construction path (the flat kwargs remain as a deprecation shim).
+``AdaptConfig(slo=...)`` closes the runtime-precision loop (repro.adapt);
+``spec=SpecConfig(...)`` runs self-speculative decode rounds (repro.spec);
+``SchedulingConfig(tenants=, classes=)`` turns on multi-tenant priority
+scheduling; ``CacheConfig(layout="paged")`` switches the KV cache to the
+page-table pool.  See DESIGN.md sections Serving / Runtime adaptation /
+Speculative decoding / Multi-tenant scheduling / Paged KV cache.
 """
+from repro.serve.config import (  # noqa: F401
+    AdaptConfig,
+    CacheConfig,
+    SchedulingConfig,
+    ServeConfig,
+)
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.paged import (  # noqa: F401
+    DenseLayout,
+    KVLayout,
+    PagedLayout,
+    PagePool,
+    make_layout,
+)
 from repro.serve.scheduler import Request, Scheduler, ragged_requests  # noqa: F401
 from repro.serve.tenancy import (  # noqa: F401
     RequestClass,

@@ -45,11 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import LanguageModel
+from repro.serve.config import ServeConfig
 from repro.serve.metrics import ServeMetrics
+from repro.serve.paged import make_layout
 from repro.serve.scheduler import Request, Scheduler, Ticket
 from repro.serve.tenancy import RequestClass, Tenant
 
-__all__ = ["Request", "RequestClass", "ServeEngine", "Tenant"]
+__all__ = ["Request", "RequestClass", "ServeConfig", "ServeEngine", "Tenant"]
 
 
 def _plan_phase(model: LanguageModel, tokens: int, accuracy: float,
@@ -79,30 +81,15 @@ def _plan_phase(model: LanguageModel, tokens: int, accuracy: float,
 def row_select(ax: int, new, old, active):
     """Per-row select along a state leaf's batch axis ``ax``: rows where
     ``active`` is False keep ``old`` exactly — the masking invariant shared
-    by the masked steps and the speculative rollback (repro.spec)."""
+    by the masked steps and the speculative rollback (repro.spec).  Leaves
+    with no batch axis (``repro.serve.paged.SHARED`` — the paged pools) keep
+    ``new``: per-row isolation for them is the page table's job (inactive
+    rows' cleared tables redirect their writes to the scratch page)."""
+    if ax < 0:
+        return new
     shape = [1] * new.ndim
     shape[ax] = active.shape[0]
     return jnp.where(active.reshape(shape), new, old)
-
-
-def _batch_axes(model: LanguageModel, slots: int, max_len: int):
-    """Per-leaf batch-axis index of the per-slot DecodeState, found by
-    comparing abstract shapes at two slot counts (no allocation).  Cache
-    layouts put batch at different axes (stacked caches: axis 1 after the
-    layer axis; un-stacked hybrid remainder / position: axis 0) — this is
-    the one place that knows, so scatter and select stay layout-generic."""
-    a = jax.eval_shape(
-        lambda: model.init_decode_state(slots, max_len, per_slot=True))
-    b = jax.eval_shape(
-        lambda: model.init_decode_state(slots + 1, max_len, per_slot=True))
-
-    def axis(x, y):
-        for i, (p, q) in enumerate(zip(x.shape, y.shape)):
-            if p != q:
-                return i
-        raise ValueError(f"no batch axis in state leaf {x.shape}")
-
-    return jax.tree.map(axis, a, b)
 
 
 class ServeEngine:
@@ -113,7 +100,8 @@ class ServeEngine:
     #: therefore flips the RMPM mode bits between the phases of one workload.
     DECODE_ACCURACY_SCALE = 2.0**-4
 
-    def __init__(self, model: LanguageModel, params, batch_slots: int, max_len: int,
+    def __init__(self, model: LanguageModel, params,
+                 batch_slots: int | None = None, max_len: int | None = None,
                  greedy: bool = True, accuracy: float | None = None,
                  plan_backend: str | None = None,
                  prefill_tokens: int | None = None,
@@ -124,8 +112,15 @@ class ServeEngine:
                  tenants=None, classes=None,
                  scheduler_policy: str = "priority",
                  preempt: bool = True, aging_steps: int = 8,
-                 min_quantum: int = 2):
-        """``slo`` (repro.adapt.SLO) turns on closed-loop runtime precision
+                 min_quantum: int = 2, cache=None,
+                 config: ServeConfig | None = None):
+        """``config=ServeConfig(...)`` is the documented construction path —
+        one frozen value grouping the scheduling / adaptation / speculation /
+        cache surfaces (repro.serve.config).  The flat kwargs remain as a
+        deprecation shim: they are regrouped through
+        ``ServeConfig.from_kwargs`` and must not be mixed with ``config=``.
+
+        ``slo`` (repro.adapt.SLO) turns on closed-loop runtime precision
         adaptation of the decode phase: the planner's decode modes become a
         mutable ModeTable whose int32 scalars feed one compiled masked step
         (``lax.switch`` branch select — zero recompiles across mode changes);
@@ -156,6 +151,40 @@ class ServeEngine:
         with active slots.  ``scheduler_policy="fifo"`` restores the pure
         submission-order baseline (the tenant sweep's comparison point).
         """
+        if config is not None:
+            if batch_slots is not None or max_len is not None:
+                raise ValueError(
+                    "pass either config=ServeConfig(...) or the legacy flat "
+                    "kwargs, not both")
+            cfg = config
+        else:
+            if batch_slots is None or max_len is None:
+                raise TypeError(
+                    "ServeEngine requires batch_slots and max_len (or a "
+                    "config=ServeConfig(...))")
+            cfg = ServeConfig.from_kwargs(
+                batch_slots, max_len, greedy=greedy, accuracy=accuracy,
+                plan_backend=plan_backend, prefill_tokens=prefill_tokens,
+                decode_accuracy_scale=decode_accuracy_scale,
+                tune_table=tune_table, slo=slo, adapt_every=adapt_every,
+                adapt=adapt, controller=controller, speculate=speculate,
+                tenants=tenants, classes=classes,
+                scheduler_policy=scheduler_policy, preempt=preempt,
+                aging_steps=aging_steps, min_quantum=min_quantum,
+                cache=cache)
+        self.config = cfg
+        batch_slots, max_len = cfg.batch_slots, cfg.max_len
+        greedy, accuracy = cfg.greedy, cfg.accuracy
+        plan_backend, prefill_tokens = cfg.plan_backend, cfg.prefill_tokens
+        decode_accuracy_scale = cfg.decode_accuracy_scale
+        tune_table = cfg.tune_table
+        sch = cfg.scheduling
+        tenants, classes = sch.tenants, sch.classes
+        scheduler_policy, preempt = sch.policy, sch.preempt
+        aging_steps, min_quantum = sch.aging_steps, sch.min_quantum
+        slo, adapt_every = cfg.adapt.slo, cfg.adapt.adapt_every
+        adapt, controller = cfg.adapt.adapt, cfg.adapt.controller
+        speculate = cfg.spec
         if not greedy:
             # the masked step and the solo prefill take argmax; pretending
             # to honour a sampling flag would silently return greedy tokens
@@ -202,22 +231,29 @@ class ServeEngine:
             aging_steps=aging_steps, min_quantum=min_quantum)
         self.metrics.set_tenant_shares(
             {name: t.share for name, t in self.scheduler.tenants.items()})
-        #: rid -> parked per-slot state row (device pytree) of preempted
-        #: requests, scattered back verbatim at re-admission
-        self._parked: dict[int, object] = {}
-        self.state = self.model_decode.init_decode_state(
-            batch_slots, max_len, per_slot=True)
-        # solo-prefill template: one per-slot row, reused for every prefill
+        #: rid -> (parked per-slot state row (device pytree), cache length)
+        #: of preempted requests, scattered back verbatim at re-admission
+        self._parked: dict[int, tuple[object, int]] = {}
+        #: the KV layout owns the decode state's shape, the per-row
+        #: gather/scatter, and (paged) the page-pool bookkeeping — the
+        #: engine never touches cache internals directly (repro.serve.paged)
+        self.layout = make_layout(cfg.cache, self.model_decode,
+                                  batch_slots, max_len)
+        self.state = self.layout.init()
+        # solo-prefill template: one per-slot row, reused for every prefill.
+        # Always the *dense* layout — the batch-1 dense row is the exchange
+        # format every layout's scatter_row/gather_row speaks.
         self._solo0 = self.model_prefill.init_decode_state(
             1, max_len, per_slot=True)
-        self._axes = _batch_axes(self.model_decode, batch_slots, max_len)
+        self._axes = self.layout.axes
         self._prefill = jax.jit(self.model_prefill.decode_step)
         self._step = jax.jit(self._masked_step)
-        self._scatter = jax.jit(self._scatter_slot)
-        self._gather = jax.jit(self._gather_slot)
         # host-side slot mirrors
         self._active = np.zeros((batch_slots,), bool)
         self._last_tok = np.zeros((batch_slots,), np.int32)
+        #: tokens currently in each slot's cache (virtual length) — drives
+        #: paged allocation-on-append and the tier cold-page ages
+        self._row_len = np.zeros((batch_slots,), np.int64)
         # -- runtime adaptation (repro.adapt) --------------------------------
         self.slo = slo
         self._adapt = bool(adapt)
@@ -333,25 +369,6 @@ class ServeEngine:
             self._axes, new_state, state)
         return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), merged
 
-    def _scatter_slot(self, state, solo, slot):
-        """Write a batch-1 per-slot state (a freshly prefilled request) into
-        row ``slot`` of the engine state — the mid-flight join."""
-        return jax.tree.map(
-            lambda ax, s, r: jax.lax.dynamic_update_slice_in_dim(
-                s, r.astype(s.dtype), slot, axis=ax),
-            self._axes, state, solo,
-        )
-
-    def _gather_slot(self, state, slot):
-        """Read row ``slot`` of the engine state as a batch-1 per-slot state
-        (one ``dynamic_slice`` per leaf) — the preemption park.  The inverse
-        of ``_scatter_slot``: scatter(gather(state, s), s) is the identity,
-        which is why a preempted request resumes bit-identically."""
-        return jax.tree.map(
-            lambda ax, s: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=ax),
-            self._axes, state,
-        )
-
     def _masked_step_modal(self, params, tokens, state, active, modes):
         """The masked step with the mode table bound: ``modes`` is a dict of
         int32 scalars (jit arguments), so every table mutation between steps
@@ -409,7 +426,8 @@ class ServeEngine:
         self.scheduler.tick()
         for victim in self.scheduler.plan_preemptions():
             self._park_slot(victim)
-        for slot, ticket in self.scheduler.admit():
+        self.layout.begin_admission()
+        for slot, ticket in self.scheduler.admit(can_admit=self._can_admit):
             if slot < 0:
                 # zero-budget admission (nothing fits the cache): the
                 # scheduler completed it without a slot — route the
@@ -425,6 +443,8 @@ class ServeEngine:
             events.append((ticket.rid, first))
             self._emit(ticket, slot, first)
         if self._active.any():
+            self._prepare_pages()
+        if self._active.any():
             if self.spec is not None:
                 events.extend(self._spec_step())
             else:
@@ -436,15 +456,71 @@ class ServeEngine:
                     self._adapt_tick_tenants()
                 else:
                     self._adapt_tick()
+            self._page_tick()
         return events
+
+    def _can_admit(self, ticket: Ticket) -> bool:
+        """Admission gate handed to the scheduler: the layout says whether
+        it can map this ticket's cache content (dense: always — the free
+        slot IS the capacity; paged: free pages after prefix-sharing
+        hits)."""
+        if ticket.rid in self._parked:
+            return self.layout.can_admit(self._parked[ticket.rid][1])
+        return self.layout.can_admit(len(ticket.prompt),
+                                     prompt=ticket.prompt)
+
+    def _prepare_pages(self) -> None:
+        """Paged allocation-on-append, before the decode dispatch: every
+        active row gets pages covering the tokens this step will write
+        (1 plain decode, k+1 speculative).  When the pool cannot serve a
+        row, the scheduler names a page-pressure victim — lowest effective
+        priority among running requests — and its exact state parks
+        (gather + requeue, the same bit-exact preemption path tenancy
+        uses), freeing its pages; repeat until the survivors fit.  Dense
+        layouts return no failures and this is a no-op."""
+        ahead = (self.spec.k + 1) if self.spec is not None else 1
+        while self._active.any():
+            lengths = {int(s): int(self._row_len[s])
+                       for s in np.nonzero(self._active)[0]}
+            self.state, failed = self.layout.prepare_step(
+                self.state, lengths, ahead)
+            if not failed:
+                return
+            victim = self.scheduler.page_victim()
+            if victim is None or victim.slot is None:
+                victim = self.scheduler.by_slot[failed[0]]
+            self._park_slot(victim)
+            self.metrics.on_page_evict()
+
+    def _page_tick(self) -> None:
+        """Post-step page accounting: occupancy/sharing stats every step,
+        one tier demotion/measurement pass every ``tier_policy.every``
+        decode steps (repro.adapt.pages)."""
+        stats = self.layout.page_stats()
+        if stats is None:
+            return
+        self.metrics.on_page_stats(stats)
+        tp = self.config.cache.tier_policy
+        if tp is None or self.metrics.decode_steps % tp.every != 0:
+            return
+        lengths = {int(s): int(self._row_len[s])
+                   for s in np.nonzero(self._active)[0]}
+        self.state, tstats = self.layout.tier_tick(
+            self.state, lengths, self.metrics.decode_steps)
+        if tstats is not None:
+            self.metrics.on_page_tier(self.metrics.decode_steps, tstats)
 
     def _park_slot(self, victim: Ticket) -> None:
         """Preempt a running request: gather its exact per-slot state row
-        off the device, free the slot, and requeue the ticket.  Nothing is
-        recomputed at resume — ``_resume_slot`` scatters this row back, so
-        the token stream continues bit-identically."""
+        off the device (as a dense batch-1 row, whatever the layout), free
+        the slot — and, paged, the row's pages — and requeue the ticket.
+        Nothing is recomputed at resume — ``_resume_slot`` scatters this
+        row back, so the token stream continues bit-identically."""
         slot = victim.slot
-        self._parked[victim.rid] = self._gather(self.state, jnp.int32(slot))
+        self._parked[victim.rid] = (
+            self.layout.gather_row(self.state, slot),
+            int(self._row_len[slot]))
+        self.state = self.layout.free_row(self.state, slot)
         self._active[slot] = False
         self.scheduler.preempt(victim.rid)
         self.metrics.on_preempt(victim.rid)
@@ -454,8 +530,10 @@ class ServeEngine:
         the (possibly different) slot and rearm the host mirrors.  No token
         is emitted and no prefill runs — the next masked step continues
         from ``ticket.tokens[-1]`` exactly as if the gap never happened."""
-        row = self._parked.pop(ticket.rid)
-        self.state = self._scatter(self.state, row, jnp.int32(slot))
+        row, length = self._parked.pop(ticket.rid)
+        self.state = self.layout.scatter_row(
+            self.state, row, slot, length=length)
+        self._row_len[slot] = length
         self._active[slot] = True
         self._last_tok[slot] = ticket.tokens[-1]
 
@@ -522,6 +600,7 @@ class ServeEngine:
         for slot in np.nonzero(self._active)[0]:
             ticket = self.scheduler.by_slot[int(slot)]
             tok = int(produced[slot])
+            self._row_len[slot] += 1  # this step appended one KV entry
             events.append((ticket.rid, tok))
             self._emit(ticket, int(slot), tok)
         return events
@@ -556,6 +635,9 @@ class ServeEngine:
         for slot in np.nonzero(active_np)[0]:
             ticket = self.scheduler.by_slot[int(slot)]
             j = int(n_acc[slot])
+            # the rolled-back cache holds the accepted prefix + correction
+            # (budget clamping truncates *emission*, not the cache)
+            self._row_len[slot] += j + 1
             # two accounts: metrics credit only drafts that were *emitted*
             # (a budget-truncated tail did no useful work), while the
             # controller sees raw draft/verify *agreement* — truncation says
@@ -678,7 +760,9 @@ class ServeEngine:
     def _prefill_slot(self, slot: int, ticket: Ticket) -> int:
         logits, solo = self._prefill(
             self.params, jnp.asarray(ticket.prompt)[None, :], self._solo0)
-        self.state = self._scatter(self.state, solo, jnp.int32(slot))
+        self.state = self.layout.scatter_row(
+            self.state, solo, slot, prompt=ticket.prompt)
+        self._row_len[slot] = len(ticket.prompt)
         return int(jnp.argmax(logits[0, -1]))
 
     def _emit(self, ticket: Ticket, slot: int, tok: int) -> None:
@@ -688,6 +772,8 @@ class ServeEngine:
             self.scheduler.complete(ticket.rid)
             self.metrics.on_done(ticket.rid, step=self.scheduler.clock)
             self._active[slot] = False
+            # completion frees the row's pages back to the pool (dense: no-op)
+            self.state = self.layout.free_row(self.state, slot)
         else:
             self.scheduler.start_decode(ticket.rid)
             self._active[slot] = True
@@ -778,6 +864,10 @@ class ServeEngine:
             f"{self.controller.down_shifts} down) | occupancy {occ} | "
             f"timeline {timeline}"
         )
+
+    def describe_cache(self) -> str:
+        """One-line KV layout report (layout name, pools, tiers, sharing)."""
+        return self.layout.describe()
 
     def generate_batch(self, requests: list[Request]) -> dict[int, list[int]]:
         """Offline batch API on top of the streaming engine: submit

@@ -91,6 +91,14 @@ class ServeMetrics:
         self.spec_accepted = 0
         self.spec_emitted = 0
         self.draft_shift_timeline: list[tuple[int, int]] = []  # (round, shift)
+        # paged KV cache (repro.serve.paged): peak concurrent in-flight
+        # rows, per-step pool stats, page-pressure evictions, tier events
+        self.peak_active = 0
+        self.page_stats_last: dict | None = None
+        self.page_occupancy_peak = 0.0
+        self.page_sharing_peak = 0.0
+        self.page_evictions = 0
+        self.tier_events: list[tuple[int, dict]] = []  # (decode_step, stats)
         self._t_first_event: float | None = None
         self._t_last_event: float | None = None
         snap = plan_cache_stats()
@@ -140,6 +148,7 @@ class ServeMetrics:
                        tenant_active: dict[str, int] | None = None) -> None:
         self.decode_steps += 1
         self.active_slot_steps += n_active
+        self.peak_active = max(self.peak_active, n_active)
         if tenant_active:
             for name, n in tenant_active.items():
                 self.tenant_slot_steps[name] = (
@@ -174,6 +183,26 @@ class ServeMetrics:
     def on_draft_shift(self, round_idx: int, shift: int) -> None:
         """One applied acceptance-controller move of the draft-mode shift."""
         self.draft_shift_timeline.append((round_idx, shift))
+
+    def on_page_stats(self, stats: dict) -> None:
+        """Per-step paged-pool snapshot (occupancy, sharing, tier mix) —
+        the last snapshot and the occupancy peak are kept."""
+        self.page_stats_last = stats
+        self.page_occupancy_peak = max(self.page_occupancy_peak,
+                                       stats.get("occupancy", 0.0))
+        self.page_sharing_peak = max(self.page_sharing_peak,
+                                     stats.get("sharing_ratio", 0.0))
+
+    def on_page_evict(self) -> None:
+        """One page-pressure eviction: the pool could not grow an active
+        row, so the scheduler's victim parked (on top of the on_preempt the
+        engine's park path already records)."""
+        self.page_evictions += 1
+
+    def on_page_tier(self, step: int, stats: dict) -> None:
+        """One applied tier tick (demotions/promotions + measured
+        residuals, repro.adapt.pages)."""
+        self.tier_events.append((step, stats))
 
     def on_done(self, rid: int, step: int | None = None) -> None:
         r = self.requests[rid]
@@ -331,8 +360,27 @@ class ServeMetrics:
             "acceptance_rate": self.acceptance_rate,
             "verify_steps_per_token": self.verify_steps_per_token,
             "draft_shift_moves": len(self.draft_shift_timeline),
+            "peak_active": self.peak_active,
+            "pages": self._pages_summary(),
             "plan_cache": self.plan_cache_delta(),
         }
+
+    def _pages_summary(self) -> dict | None:
+        if self.page_stats_last is None:
+            return None
+        s = dict(self.page_stats_last)
+        s["occupancy_peak"] = self.page_occupancy_peak
+        s["sharing_peak"] = self.page_sharing_peak
+        s["page_evictions"] = self.page_evictions
+        s["tier_ticks"] = len(self.tier_events)
+        s["tier_demoted"] = sum(t.get("demoted", 0)
+                                for _, t in self.tier_events)
+        s["tier_promoted"] = sum(t.get("promoted", 0)
+                                 for _, t in self.tier_events)
+        s["tier_err_max"] = (max(t.get("err", 0.0)
+                                 for _, t in self.tier_events)
+                             if self.tier_events else None)
+        return s
 
     def format_summary(self) -> str:
         s = self.summary()
@@ -358,6 +406,17 @@ class ServeMetrics:
                     f"{s['acceptance_rate']:.2f}, verify-steps/token "
                     f"{s['verify_steps_per_token']:.2f}"
                     f" ({s['draft_shift_moves']} draft-shift moves)")
+        if s["pages"] is not None:
+            p = s["pages"]
+            out += (f" | pages {p['pages_used']}/{p['pages_total']} "
+                    f"(peak occ {p['occupancy_peak']:.2f}, "
+                    f"sharing {p['sharing_ratio']:.2f}, "
+                    f"{p['page_evictions']} evictions)")
+            if p["tier_ticks"]:
+                err = (f"{p['tier_err_max']:.2e}"
+                       if p["tier_err_max"] is not None else "-")
+                out += (f" | tiers {p['tier_demoted']} demoted / "
+                        f"{p['tier_promoted']} promoted, err max {err}")
         return out
 
     def format_tenants(self) -> str:

@@ -1,0 +1,851 @@
+"""KV-cache layouts behind one protocol: dense slot rows or paged pools.
+
+The serve engine used to hard-code the dense per-slot ring cache: admission
+counted free *slots*, park/resume moved dense rows with per-leaf
+``dynamic_slice_in_dim``, and spec rollback assumed ``KVCache`` nodes.  This
+module is the redesign seam: a :class:`KVLayout` protocol
+
+    init / state_spec / gather_row / scatter_row / free_row /
+    can_admit / prepare_step / tier_tick / describe
+
+with two implementations —
+
+* :class:`DenseLayout` — today's per-slot ring cache, bit-identical to the
+  pre-paged engine (the default);
+* :class:`PagedLayout` — every KV group becomes a
+  :class:`~repro.models.layers.PagedKVCache`: fixed-size pages in a shared
+  pool, per-row page tables, allocation on append and free on completion or
+  eviction.  Virtual addressing preserves the dense ring semantics exactly,
+  so at full precision paged serving is bit-identical to dense — while
+  admission is gated on free *pages*, so short-lived requests stack far past
+  the dense ``slots x max_len`` wall.
+
+On top of the paged layout ride the two things a fixed layout cannot offer
+(DESIGN.md section Paged KV cache):
+
+* **precision-tiered pages** — cold pages are mantissa-truncated in place by
+  the ``quantize_mantissa`` Pallas kernel under a
+  :class:`~repro.adapt.pages.PageTierController` (demotion is lossy;
+  promotion restores the floor);
+* **radix-style prefix sharing** — page ``j`` of a prompt's KV depends only
+  on ``prompt[:(j+1)*page_size]`` (causal attention), so that byte string
+  keys a per-group index of read-only shared pages.  A row never writes a
+  shared or index-held page: decode appends and ring wraps trigger
+  copy-on-write forks in :meth:`PagePool.cow`.
+
+The exchange format between layouts is the *dense solo row*: ``gather_row``
+always returns the same per-slot batch-1 pytree the solo prefill produces,
+so parking, resume, prefill and speculative rollback stay layout-agnostic.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.adapt.pages import HOT, PageTierController
+from repro.models.layers import (
+    KVCache,
+    PagedKVCache,
+    paged_cache_init,
+    paged_view,
+    stack_tree,
+)
+from repro.serve.config import CacheConfig
+
+#: axes sentinel for pool leaves shared by every row (no batch axis): the
+#: masked step's row_select keeps the *new* value — per-row isolation is
+#: enforced by the page table (cleared tables redirect writes to scratch)
+SHARED = -1
+
+
+def _is_kv(x) -> bool:
+    return isinstance(x, KVCache)
+
+
+def _is_paged(x) -> bool:
+    return isinstance(x, PagedKVCache)
+
+
+def _is_cache(x) -> bool:
+    return isinstance(x, (KVCache, PagedKVCache))
+
+
+def compute_axes(spec_fn, slots: int):
+    """Per-leaf batch-axis pytree found by diffing abstract shapes at two
+    slot counts (``ServeEngine._batch_axes``, generalized): leaves whose
+    shape does not depend on the slot count — the paged pools — get
+    :data:`SHARED`."""
+    a = spec_fn(slots)
+    b = spec_fn(slots + 1)
+
+    def axis(x, y):
+        for i, (p, q) in enumerate(zip(x.shape, y.shape)):
+            if p != q:
+                return i
+        return SHARED
+
+    return jax.tree.map(axis, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Device primitives on one PagedKVCache node (vmapped over the layer axis
+# for stacked groups)
+# ---------------------------------------------------------------------------
+
+
+def paged_gather_row(c: PagedKVCache, slot) -> KVCache:
+    """Materialize row ``slot`` as a dense batch-1 per-slot ``KVCache`` —
+    the layout-agnostic exchange format (park/resume/rollback all speak
+    dense rows).  Unmapped page-table entries read the scratch page; the
+    garbage there is outside the row's valid positions, and scatter_row
+    writes the same region back, so park -> resume round-trips bit-exactly."""
+    cap = c.pos.shape[1]
+    npg, ps = c.page_tbl.shape[1], c.k_pool.shape[1]
+    tbl = jnp.maximum(jax.lax.dynamic_slice_in_dim(c.page_tbl, slot, 1, 0), 0)
+
+    def g(pool):
+        if pool is None:
+            return None
+        return pool[tbl].reshape(1, npg * ps, *pool.shape[2:])[:, :cap]
+
+    return KVCache(
+        g(c.k_pool), g(c.v_pool), g(c.k_scale), g(c.v_scale),
+        jax.lax.dynamic_slice_in_dim(c.pos, slot, 1, 0),
+        jax.lax.dynamic_slice_in_dim(c.length, slot, 1, 0),
+    )
+
+
+def paged_scatter_row(c: PagedKVCache, row: KVCache, slot,
+                      write_tbl) -> PagedKVCache:
+    """Write a dense batch-1 row into the pool through ``write_tbl`` — the
+    per-page *write* table: entries of -1 (shared prefix pages, unmapped
+    tail) redirect to the scratch page, so read-only pages are never
+    touched.  ``pos``/``length`` are per-row leaves and always written."""
+    cap = c.pos.shape[1]
+    ps = c.k_pool.shape[1]
+    vi = jnp.arange(cap, dtype=jnp.int32)
+    pages = jnp.maximum(write_tbl[vi // ps], 0)
+    off = vi % ps
+
+    def put(pool, vals):
+        if pool is None:
+            return None
+        return pool.at[pages, off].set(vals[0].astype(pool.dtype))
+
+    return dataclasses.replace(
+        c,
+        k_pool=put(c.k_pool, row.k), v_pool=put(c.v_pool, row.v),
+        k_scale=put(c.k_scale, row.k_scale),
+        v_scale=put(c.v_scale, row.v_scale),
+        pos=jax.lax.dynamic_update_slice_in_dim(c.pos, row.pos, slot, axis=0),
+        length=jax.lax.dynamic_update_slice_in_dim(
+            c.length, row.length, slot, axis=0),
+    )
+
+
+def copy_page_node(node: PagedKVCache, src, dst) -> PagedKVCache:
+    """Device-side copy-on-write fork: duplicate pool page ``src`` into the
+    freshly allocated ``dst`` (every pool leaf, all layers of a stacked
+    group at once)."""
+    ax = node.k_pool.ndim - 4  # page axis: 0 unstacked, 1 layer-stacked
+
+    def cp(pool):
+        if pool is None:
+            return None
+        page = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=ax)
+        return jax.lax.dynamic_update_slice_in_dim(pool, page, dst, axis=ax)
+
+    return dataclasses.replace(
+        node, k_pool=cp(node.k_pool), v_pool=cp(node.v_pool),
+        k_scale=cp(node.k_scale), v_scale=cp(node.v_scale))
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def tier_node(node: PagedKVCache, demote, shadow, keep, next_keep,
+              rounding):
+    """Demote pages in ``demote`` (bool (P,)) to ``keep`` mantissa bits in
+    place via the quantize_mantissa kernel, and measure
+
+      * ``err``      — max relative residual the applied demotions introduced;
+      * ``err_down`` — would-be residual of truncating the ``shadow`` pages
+        to ``next_keep`` (computed, never applied — controller invariant ii:
+        the config being *entered* is measured before entering it).
+
+    ``keep=None`` applies nothing (depth 0: the shadow still measures)."""
+    from repro.kernels.quantize_mantissa.ops import quantize_mantissa_op
+
+    def pool_err(pool, mask, bits, apply):
+        if bits is None:
+            return pool, jnp.float32(0.0)
+        shape = [1] * pool.ndim
+        shape[pool.ndim - 4] = mask.shape[0]
+        m = mask.reshape(shape)
+        f = pool.astype(jnp.float32)
+        q = quantize_mantissa_op(f, bits, rounding=rounding)
+        d = jnp.max(jnp.where(m, jnp.abs(f - q), 0.0))
+        a = jnp.max(jnp.where(m, jnp.abs(f), 0.0))
+        err = d / (a + 1e-30)
+        if apply:
+            pool = jnp.where(m, q, f).astype(pool.dtype)
+        return pool, err
+
+    k_pool, ek = pool_err(node.k_pool, demote, keep, apply=True)
+    v_pool, ev = pool_err(node.v_pool, demote, keep, apply=True)
+    _, ekd = pool_err(node.k_pool, shadow, next_keep, apply=False)
+    _, evd = pool_err(node.v_pool, shadow, next_keep, apply=False)
+    err = jnp.maximum(ek, ev)
+    err_down = jnp.maximum(ekd, evd) if next_keep is not None else err
+    return dataclasses.replace(node, k_pool=k_pool, v_pool=v_pool), err, err_down
+
+
+# ---------------------------------------------------------------------------
+# Host-side page-pool allocator (one per cache group)
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Free-list allocator + refcounts + prefix index for one cache group.
+
+    Pool indices are 1-based: page 0 is the scratch page (-1 table entries
+    clamp to it on device).  ``ref`` counts *row* references; pages whose
+    refcount drops to zero while registered in the prefix index park in an
+    LRU of ``cached`` pages — still shareable, reclaimed (index entry
+    dropped) only when the free list runs dry.  A page is privately
+    writable iff ``ref == 1`` and it is not index-held; everything else
+    forks via :meth:`cow`.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, cap: int, rows: int):
+        self.ps = page_size
+        self.cap = cap
+        self.rows = rows
+        self.per_row = -(-cap // page_size)
+        if n_pages < self.per_row:
+            raise ValueError(
+                f"pool of {n_pages} pages cannot hold one full row "
+                f"(cap={cap}, page_size={page_size})")
+        self.n_pages = n_pages
+        self.free: collections.deque[int] = collections.deque(
+            range(1, n_pages + 1))
+        self.ref = np.zeros(n_pages + 1, np.int32)
+        self.tier = np.full(n_pages + 1, HOT, np.int32)  # keep-bits labels
+        self.tbl = np.full((rows, self.per_row), -1, np.int32)
+        self.index: dict[bytes, int] = {}  # prefix key -> shared page
+        self.page_key: dict[int, bytes] = {}
+        self.cached: dict[int, None] = {}  # ref==0 index-held pages (LRU)
+        self.reserved = 0  # admission-gate reservations (reset each admit)
+        self.shared_hits = 0
+        self.cow_copies = 0
+        self.index_evictions = 0
+
+    # -- capacity ------------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages covering ``n_tokens`` of virtual content (ring-clamped)."""
+        return -(-min(max(n_tokens, 1), self.cap) // self.ps)
+
+    def available(self) -> int:
+        return len(self.free) + len(self.cached) - self.reserved
+
+    def _alloc(self) -> int | None:
+        if self.free:
+            p = self.free.popleft()
+        elif self.cached:
+            # reclaim the LRU prefix-cache page: drop its index entry
+            p = next(iter(self.cached))
+            del self.cached[p]
+            key = self.page_key.pop(p)
+            del self.index[key]
+            self.index_evictions += 1
+        else:
+            return None
+        self.ref[p] = 1
+        self.tier[p] = HOT
+        return p
+
+    def _release(self, p: int) -> None:
+        self.ref[p] -= 1
+        if self.ref[p] == 0:
+            if p in self.page_key:
+                self.cached[p] = None  # shareable until reclaimed
+            else:
+                self.free.append(p)
+
+    # -- row lifecycle -------------------------------------------------------
+
+    def free_row(self, row: int) -> None:
+        """Drop every page reference of ``row`` and clear its table — the
+        engine calls this on completion and on eviction BEFORE the next
+        device sync, so freed pages can never be written through a stale
+        table."""
+        for p in self.tbl[row]:
+            if p >= 0:
+                self._release(int(p))
+        self.tbl[row] = -1
+
+    def peek_needed(self, n_tokens: int, keys: list[bytes] | None) -> int:
+        """Fresh pages a new row of ``n_tokens`` content (+1 append slot)
+        would allocate after prefix-sharing hits — the admission gate."""
+        target = self.pages_for(n_tokens + 1)
+        hits = 0
+        if keys is not None and n_tokens <= self.cap:
+            for j in range(min(n_tokens // self.ps, target)):
+                if keys[j] in self.index:
+                    hits += 1
+        return target - hits
+
+    def attach(self, row: int, n_tokens: int,
+               keys: list[bytes] | None) -> np.ndarray | None:
+        """Map a new row covering ``n_tokens`` content (+1 append slot).
+        Full prompt pages with an index hit attach read-only (refcount++);
+        misses allocate and — when keyed — register in the prefix index.
+        Returns the per-page *write* table (-1 = shared page, skip the
+        write) or None when the pool is exhausted."""
+        target = self.pages_for(n_tokens + 1)
+        wt = np.full(self.per_row, -1, np.int32)
+        shareable = keys is not None and n_tokens <= self.cap
+        for j in range(target):
+            key = (keys[j] if shareable and j < n_tokens // self.ps else None)
+            if key is not None:
+                p = self.index.get(key)
+                if p is not None:
+                    if self.ref[p] == 0:
+                        self.cached.pop(p, None)
+                    self.ref[p] += 1
+                    self.tbl[row, j] = p
+                    self.shared_hits += 1
+                    continue
+            p = self._alloc()
+            if p is None:
+                return None
+            self.tbl[row, j] = p
+            wt[j] = p
+            if key is not None:
+                self.index[key] = p
+                self.page_key[p] = key
+        return wt
+
+    def ensure(self, row: int, upto_tokens: int) -> bool:
+        """Extend ``row``'s mapping to cover ``upto_tokens`` of virtual
+        content (the pre-step allocation-on-append)."""
+        for j in range(self.pages_for(upto_tokens)):
+            if self.tbl[row, j] < 0:
+                p = self._alloc()
+                if p is None:
+                    return False
+                self.tbl[row, j] = p
+        return True
+
+    def cow(self, row: int, lo: int, hi: int) -> list[tuple[int, int]] | None:
+        """Make the pages overlapping virtual token range [lo, hi) privately
+        writable: shared (ref > 1) or index-held pages fork into fresh
+        allocations.  Returns (src, dst) device-copy pairs, or None on
+        exhaustion."""
+        pairs: list[tuple[int, int]] = []
+        for j in sorted({(v % self.cap) // self.ps for v in range(lo, hi)}):
+            p = int(self.tbl[row, j])
+            if p < 0:
+                continue  # unmapped: ensure() allocates fresh, nothing to fork
+            if self.ref[p] == 1 and p not in self.page_key:
+                continue  # exclusively owned: writable in place
+            d = self._alloc()
+            if d is None:
+                return None
+            self.tier[d] = self.tier[p]  # the fork inherits the tier label
+            self._release(p)
+            self.tbl[row, j] = d
+            pairs.append((p, d))
+            self.cow_copies += 1
+        return pairs
+
+    # -- tiering / stats -----------------------------------------------------
+
+    def page_ages(self, lengths: dict[int, int]) -> dict[int, int]:
+        """Per referenced page, the minimum over referencing rows of how far
+        its newest token trails that row's head.  Ring-wrapped rows
+        (length > cap) keep all their pages hot — a wrapped page mixes old
+        and new tokens, so age is ill-defined for it.  Index-cached pages
+        with no row reference are never demoted (future sharers expect the
+        precision they were written at)."""
+        ages: dict[int, int] = {}
+        for row, ln in lengths.items():
+            if ln > self.cap:
+                continue
+            for j in range(self.pages_for(ln)):
+                p = int(self.tbl[row, j])
+                if p < 0:
+                    continue
+                age = ln - min((j + 1) * self.ps, ln)
+                ages[p] = min(ages.get(p, 1 << 30), age)
+        return ages
+
+    def stats(self) -> dict:
+        used = int((self.ref > 0).sum())
+        mapped_refs = int((self.tbl >= 0).sum())
+        unique = len({int(p) for p in self.tbl.ravel() if p >= 0})
+        mix: dict[str, int] = {}
+        for p in range(1, self.n_pages + 1):
+            if self.ref[p] > 0 or p in self.cached:
+                t = int(self.tier[p])
+                mix[str(t) if t != HOT else "hot"] = (
+                    mix.get(str(t) if t != HOT else "hot", 0) + 1)
+        return {
+            "pages_total": self.n_pages,
+            "pages_used": used,
+            "pages_cached": len(self.cached),
+            "mapped_refs": mapped_refs,
+            "unique_pages": unique,
+            "tier_mix": mix,
+            "shared_hits": self.shared_hits,
+            "cow_copies": self.cow_copies,
+            "index_evictions": self.index_evictions,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+
+class KVLayout:
+    """Protocol shared by :class:`DenseLayout` and :class:`PagedLayout`.
+
+    ``gather_row``/``scatter_row`` always exchange *dense solo rows* (the
+    per-slot batch-1 pytree the solo prefill produces), so the engine's
+    prefill, park/resume and rollback never see the layout."""
+
+    name = "abstract"
+    axes = None
+
+    def init(self):
+        raise NotImplementedError
+
+    def state_spec(self, batch: int):
+        raise NotImplementedError
+
+    def gather_row(self, state, slot: int):
+        raise NotImplementedError
+
+    def scatter_row(self, state, row, slot: int, *, prompt=None, length=None):
+        raise NotImplementedError
+
+    def free_row(self, state, slot: int):
+        return state
+
+    def begin_admission(self) -> None:
+        pass
+
+    def can_admit(self, n_tokens: int, prompt=None) -> bool:
+        return True
+
+    def prepare_step(self, state, lengths: dict[int, int], ahead: int):
+        return state, []
+
+    def tier_tick(self, state, lengths: dict[int, int], step: int):
+        return state, None
+
+    def page_stats(self) -> dict | None:
+        return None
+
+    def describe(self) -> str:
+        raise NotImplementedError
+
+
+class DenseLayout(KVLayout):
+    """Today's per-slot ring cache — bit-identical to the pre-paged engine.
+    Slots are the only resource: every row owns ``max_len`` rows of every
+    cache up front, so all layout hooks are trivial."""
+
+    name = "dense"
+
+    def __init__(self, model, slots: int, max_len: int):
+        self.model = model
+        self.slots = slots
+        self.max_len = max_len
+        self.axes = compute_axes(
+            lambda b: jax.eval_shape(
+                lambda: model.init_decode_state(b, max_len, per_slot=True)),
+            slots)
+        self._gather = jax.jit(self._gather_fn)
+        self._scatter = jax.jit(self._scatter_fn)
+
+    def init(self):
+        return self.model.init_decode_state(
+            self.slots, self.max_len, per_slot=True)
+
+    def state_spec(self, batch: int):
+        return jax.eval_shape(
+            lambda: self.model.init_decode_state(
+                batch, self.max_len, per_slot=True))
+
+    def _gather_fn(self, state, slot):
+        return jax.tree.map(
+            lambda ax, s: jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=ax),
+            self.axes, state)
+
+    def _scatter_fn(self, state, row, slot):
+        return jax.tree.map(
+            lambda ax, s, r: jax.lax.dynamic_update_slice_in_dim(
+                s, r.astype(s.dtype), slot, axis=ax),
+            self.axes, state, row)
+
+    def gather_row(self, state, slot: int):
+        return self._gather(state, jnp.int32(slot))
+
+    def scatter_row(self, state, row, slot: int, *, prompt=None, length=None):
+        return self._scatter(state, row, jnp.int32(slot))
+
+    def describe(self) -> str:
+        return (f"dense ring cache: {self.slots} slots x {self.max_len} "
+                f"rows (admission on free slots)")
+
+
+@dataclasses.dataclass
+class _Group:
+    """One KV cache group of the decode state (one segment / hybrid layer
+    kind), in pytree traversal order."""
+
+    cap: int
+    n_kv: int
+    hd: int
+    dtype: str
+    stacked: bool
+    layers: int
+    pool: PagePool
+
+
+class PagedLayout(KVLayout):
+    """Page-table layout: every KV group shares a page pool; per-row page
+    tables live on the host (numpy) and sync to the device page_tbl leaves
+    lazily (before any decode/gather/scatter touches them)."""
+
+    name = "paged"
+
+    def __init__(self, model, slots: int, max_len: int, cfg: CacheConfig):
+        self.model = model
+        self.slots = slots
+        self.max_len = max_len
+        self.cfg = cfg
+        ps = cfg.page_size
+        spec = jax.eval_shape(
+            lambda: model.init_decode_state(slots, max_len, per_slot=True))
+        kv_nodes = [n for n in jax.tree.leaves(spec, is_leaf=_is_kv)
+                    if _is_kv(n)]
+        caps = [n.pos.shape[-1] for n in kv_nodes]
+        ppr_max = max((-(-c // ps) for c in caps), default=1)
+        if cfg.pool_pages is None:
+            # memory-equivalent to the dense layout at this slot count
+            self.dense_equiv_slots = slots
+        else:
+            self.dense_equiv_slots = cfg.pool_pages // ppr_max
+            if self.dense_equiv_slots < 1:
+                raise ValueError(
+                    f"pool_pages={cfg.pool_pages} below one row of the "
+                    f"largest group ({ppr_max} pages of {ps} tokens)")
+        self.groups: list[_Group] = []
+        for n in kv_nodes:
+            stacked = n.length.ndim == 2
+            cap = n.pos.shape[-1]
+            dtype = "int8" if n.k.dtype == jnp.int8 else "bf16"
+            if cfg.tier_policy is not None and dtype != "bf16":
+                raise ValueError(
+                    "tier_policy requires a bfloat16 KV cache "
+                    "(mantissa truncation of int8 pages is meaningless)")
+            per_row = -(-cap // ps)
+            n_pages = max(self.dense_equiv_slots * per_row, per_row)
+            self.groups.append(_Group(
+                cap=cap, n_kv=n.k.shape[-2], hd=n.k.shape[-1], dtype=dtype,
+                stacked=stacked, layers=n.length.shape[0] if stacked else 1,
+                pool=PagePool(n_pages, ps, cap, slots)))
+        self.tier_ctrl = (PageTierController(cfg.tier_policy)
+                          if cfg.tier_policy is not None else None)
+        self._dirty = True
+        self.axes = compute_axes(
+            lambda b: jax.eval_shape(lambda: self._build_state(b)), slots)
+        self._gather = jax.jit(self._gather_fn)
+        self._scatter = jax.jit(self._scatter_fn)
+        self._copy = jax.jit(copy_page_node)
+
+    # -- state construction --------------------------------------------------
+
+    def _build_state(self, batch: int):
+        """The dense per-slot state with every KV group replaced by its
+        paged twin (traced: the dense zeros are dead code under jit)."""
+        dense = self.model.init_decode_state(
+            batch, self.max_len, per_slot=True)
+        groups = iter(self.groups)
+
+        def conv(node):
+            if not _is_kv(node):
+                return node
+            g = next(groups)
+            c = paged_cache_init(
+                batch, g.cap, g.n_kv, g.hd,
+                "int8" if g.dtype == "int8" else "bfloat16",
+                g.pool.n_pages, g.pool.ps)
+            if g.stacked:
+                c = stack_tree(g.layers, c)
+            return c
+
+        return jax.tree.map(conv, dense, is_leaf=_is_kv)
+
+    def init(self):
+        return jax.jit(lambda: self._build_state(self.slots))()
+
+    def state_spec(self, batch: int):
+        return jax.eval_shape(lambda: self._build_state(batch))
+
+    # -- device fns (jitted once) --------------------------------------------
+
+    def _gather_fn(self, state, slot):
+        def g(axn, node):
+            if _is_paged(axn):
+                if node.length.ndim == 2:
+                    return jax.vmap(paged_gather_row, in_axes=(0, None))(
+                        node, slot)
+                return paged_gather_row(node, slot)
+            return jax.lax.dynamic_slice_in_dim(node, slot, 1, axis=axn)
+
+        return jax.tree.map(g, self.axes, state, is_leaf=_is_paged)
+
+    def _scatter_fn(self, state, row, slot, write_tbls):
+        tbls = iter(write_tbls)
+
+        def s(axn, node, rnode):
+            if _is_paged(axn):
+                wt = next(tbls)
+                if node.length.ndim == 2:
+                    return jax.vmap(paged_scatter_row,
+                                    in_axes=(0, 0, None, None))(
+                        node, rnode, slot, wt)
+                return paged_scatter_row(node, rnode, slot, wt)
+            return jax.lax.dynamic_update_slice_in_dim(
+                node, rnode.astype(node.dtype), slot, axis=axn)
+
+        return jax.tree.map(s, self.axes, state, row, is_leaf=_is_paged)
+
+    def _map_nodes(self, state, fn):
+        """Apply ``fn(group_index, node)`` to every paged node of the state
+        (pytree traversal order == ``self.groups`` order)."""
+        idx = iter(range(len(self.groups)))
+
+        def visit(axn, node):
+            if _is_paged(axn):
+                return fn(next(idx), node)
+            return node
+
+        return jax.tree.map(visit, self.axes, state, is_leaf=_is_paged)
+
+    def _sync(self, state):
+        """Push the host page tables into the device ``page_tbl`` leaves.
+        Called before anything reads or writes through the tables, so a
+        freed row's pages can never be touched via a stale device table."""
+        if not self._dirty:
+            return state
+
+        def push(gi, node):
+            tbl = jnp.asarray(self.groups[gi].pool.tbl)
+            if node.page_tbl.ndim == 3:
+                tbl = jnp.broadcast_to(tbl, node.page_tbl.shape)
+            return dataclasses.replace(node, page_tbl=tbl)
+
+        state = self._map_nodes(state, push)
+        self._dirty = False
+        return state
+
+    # -- KVLayout hooks ------------------------------------------------------
+
+    def _keys(self, prompt) -> list[bytes] | None:
+        if not self.cfg.prefix_sharing or prompt is None:
+            return None
+        p = np.asarray(prompt, np.int32)
+        ps = self.cfg.page_size
+        return [p[:(j + 1) * ps].tobytes() for j in range(len(p) // ps)]
+
+    def gather_row(self, state, slot: int):
+        state = self._sync(state)
+        return self._gather(state, jnp.int32(slot))
+
+    def scatter_row(self, state, row, slot: int, *, prompt=None, length=None):
+        n = len(prompt) if prompt is not None else int(length)
+        keys = self._keys(prompt)
+        write_tbls = []
+        for g in self.groups:
+            g.pool.free_row(slot)  # drop any stale mapping (defensive no-op)
+            wt = g.pool.attach(slot, n, keys)
+            if wt is None:
+                raise RuntimeError(
+                    "page pool exhausted inside scatter_row — the admission "
+                    "gate should have reserved these pages")
+            write_tbls.append(jnp.asarray(wt))
+        self._dirty = True
+        state = self._sync(state)
+        return self._scatter(state, row, jnp.int32(slot), tuple(write_tbls))
+
+    def free_row(self, state, slot: int):
+        for g in self.groups:
+            g.pool.free_row(slot)
+        self._dirty = True  # synced before the next table read/write
+        return state
+
+    def begin_admission(self) -> None:
+        for g in self.groups:
+            g.pool.reserved = 0
+
+    def can_admit(self, n_tokens: int, prompt=None) -> bool:
+        """Admission gated on free *pages*, not free slots: a ticket admits
+        only when every group can map its content (+1 append slot) after
+        prefix-sharing hits.  Approval reserves the pages so one admission
+        round cannot over-commit the pool."""
+        keys = self._keys(prompt)
+        needed = []
+        for g in self.groups:
+            need = g.pool.peek_needed(n_tokens, keys)
+            if g.pool.available() < need:
+                return False
+            needed.append(need)
+        for g, need in zip(self.groups, needed):
+            g.pool.reserved += need
+        return True
+
+    def prepare_step(self, state, lengths: dict[int, int], ahead: int):
+        """Allocation-on-append + copy-on-write, before the decode step:
+        every active row gets pages covering ``length + ahead`` tokens
+        (``ahead`` = 1 plain decode, k+1 speculative) and private
+        writability over the slots the step will write.  Rows the pool
+        cannot serve are returned as ``failed`` — the engine parks a
+        page-pressure victim and retries."""
+        failed: list[int] = []
+        copies: list[tuple[int, int, int]] = []  # (group, src, dst)
+        for slot, ln in lengths.items():
+            ok = True
+            for gi, g in enumerate(self.groups):
+                if not g.pool.ensure(slot, ln + ahead):
+                    ok = False
+                    break
+                pairs = g.pool.cow(slot, ln, ln + ahead)
+                if pairs is None:
+                    ok = False
+                    break
+                copies.extend((gi, s, d) for s, d in pairs)
+            if not ok:
+                failed.append(slot)
+        self._dirty = True
+        state = self._sync(state)
+        for gi, src, dst in copies:
+            state = self._map_nodes(
+                state,
+                lambda i, node, gi=gi, src=src, dst=dst:
+                self._copy(node, jnp.int32(src), jnp.int32(dst))
+                if i == gi else node)
+        return state, failed
+
+    def tier_tick(self, state, lengths: dict[int, int], step: int):
+        """One demotion/measurement pass of the precision-tier loop."""
+        tc = self.tier_ctrl
+        if tc is None or not lengths:
+            return state, None
+        pol = tc.policy
+        target, nxt = tc.target_keep, tc.next_keep
+        demote_masks, shadow_masks = [], []
+        total_cold = 0
+        for g in self.groups:
+            ages = g.pool.page_ages(lengths)
+            demote = np.zeros(g.pool.n_pages + 1, bool)
+            shadow = np.zeros(g.pool.n_pages + 1, bool)
+            for p, age in ages.items():
+                if age < pol.cold_after:
+                    continue
+                total_cold += 1
+                shadow[p] = True
+                if target is not None and g.pool.tier[p] > target:
+                    demote[p] = True
+            demote_masks.append(demote)
+            shadow_masks.append(shadow)
+        if not total_cold:
+            return state, None
+        errs, errs_down = [], []
+
+        def run(gi, node):
+            node, err, err_down = tier_node(
+                node, jnp.asarray(demote_masks[gi]),
+                jnp.asarray(shadow_masks[gi]), target, nxt, pol.rounding)
+            errs.append(err)
+            errs_down.append(err_down)
+            return node
+
+        state = self._map_nodes(state, run)
+        err = float(max(float(e) for e in errs))
+        err_down = float(max(float(e) for e in errs_down))
+        demoted = 0
+        for g, mask in zip(self.groups, demote_masks):
+            demoted += int(mask.sum())
+            if target is not None:
+                g.pool.tier[mask] = target
+        decision = tc.observe(step, err, err_down)
+        promoted = 0
+        if decision > 0:
+            # floor retreated: re-label every page demoted below it (lossy
+            # demotion, label promotion — DESIGN.md tier invariant)
+            floor = tc.target_keep if tc.target_keep is not None else HOT
+            for g in self.groups:
+                deep = g.pool.tier < floor
+                promoted += int(deep.sum())
+                g.pool.tier[deep] = floor
+        return state, {
+            "demoted": demoted, "promoted": promoted,
+            "err": err, "err_down": err_down,
+            "depth": tc.depth, "keep": target,
+        }
+
+    def page_stats(self) -> dict | None:
+        total = used = cached = mapped = unique = 0
+        shared_hits = cow = evic = 0
+        mix: dict[str, int] = {}
+        for g in self.groups:
+            s = g.pool.stats()
+            total += s["pages_total"]
+            used += s["pages_used"]
+            cached += s["pages_cached"]
+            mapped += s["mapped_refs"]
+            unique += s["unique_pages"]
+            shared_hits += s["shared_hits"]
+            cow += s["cow_copies"]
+            evic += s["index_evictions"]
+            for t, n in s["tier_mix"].items():
+                mix[t] = mix.get(t, 0) + n
+        return {
+            "pages_total": total,
+            "pages_used": used,
+            "pages_cached": cached,
+            "occupancy": used / total if total else 0.0,
+            "sharing_ratio": 1.0 - unique / mapped if mapped else 0.0,
+            "shared_hits": shared_hits,
+            "cow_copies": cow,
+            "index_evictions": evic,
+            "tier_mix": mix,
+            "dense_equiv_slots": self.dense_equiv_slots,
+        }
+
+    def describe(self) -> str:
+        tiers = (self.tier_ctrl.describe() if self.tier_ctrl is not None
+                 else "tiers off")
+        pools = ", ".join(
+            f"{g.pool.n_pages}p x {g.pool.ps}t (cap {g.cap})"
+            for g in self.groups) or "no KV groups"
+        return (f"paged cache: {self.slots} slots over pools [{pools}] "
+                f"~= {self.dense_equiv_slots} dense slots of memory | "
+                f"sharing {'on' if self.cfg.prefix_sharing else 'off'} | "
+                f"{tiers}")
+
+
+def make_layout(cfg: CacheConfig, model, slots: int, max_len: int) -> KVLayout:
+    """Layout factory for the engine: ``CacheConfig.layout`` selects."""
+    if cfg.layout == "paged":
+        return PagedLayout(model, slots, max_len, cfg)
+    return DenseLayout(model, slots, max_len)

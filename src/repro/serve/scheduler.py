@@ -218,7 +218,7 @@ class Scheduler:
             return (t.seq,)
         return (self.eff_priority(t), t.deadline, t.seq)
 
-    def admit(self) -> list[tuple[int, Ticket]]:
+    def admit(self, can_admit=None) -> list[tuple[int, Ticket]]:
         """Move waiting requests into free slots in admission-key order
         until either runs out.  Fresh tickets transition WAITING -> PREFILL;
         preempted tickets re-admit as DECODE (the engine restores their
@@ -227,7 +227,14 @@ class Scheduler:
         are returned as ``(-1, ticket)`` so the caller can route the
         completion event (the engine's metrics must agree with
         ``completed`` — completing them silently here undercounted
-        ``ServeMetrics.summary()['completed']``)."""
+        ``ServeMetrics.summary()['completed']``).
+
+        ``can_admit(ticket) -> bool`` is the engine's capacity gate beyond
+        free slots (the paged layout's free-page check).  A refused ticket
+        stays queued in place and the scan continues: a smaller request
+        further back may still fit — slot order is a *preference* under
+        memory pressure, not a barrier — while the refused ticket keeps its
+        admission-key rank for the next step."""
         out: list[tuple[int, Ticket]] = []
         keep = []
         for t in self.queue:
@@ -240,8 +247,13 @@ class Scheduler:
                 keep.append(t)
         keep.sort(key=self.admission_key)
         self.queue[:] = keep
-        while self.queue and self.free:
-            t = self.queue.pop(0)
+        i = 0
+        while i < len(self.queue) and self.free:
+            t = self.queue[i]
+            if can_admit is not None and not can_admit(t):
+                i += 1
+                continue
+            self.queue.pop(i)
             slot = self.free.popleft()
             t.slot = slot
             t.state = DECODE if t.tokens else PREFILL
@@ -295,6 +307,19 @@ class Scheduler:
             victims.append(v)
             taken.add(v.rid)
         return victims
+
+    def page_victim(self) -> Ticket | None:
+        """Name the page-pressure eviction victim: the *least* urgent
+        running DECODE ticket by (base priority, deadline, seq).  Unlike
+        :meth:`plan_preemptions` this ignores ``preempt`` and the quantum —
+        memory pressure is a correctness condition (the pool physically
+        cannot hold every active row's next tokens), not a fairness policy,
+        so some row must park regardless of configuration.  Mutates
+        nothing; the engine parks the row and calls :meth:`preempt`."""
+        cands = [t for t in self.by_slot.values() if t.state == DECODE]
+        if not cands:
+            return None
+        return max(cands, key=lambda t: (t.priority, t.deadline, t.seq))
 
     def preempt(self, rid: int) -> None:
         """Evict a running ticket back to the queue (PREEMPTED): the slot

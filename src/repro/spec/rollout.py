@@ -39,12 +39,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.adapt import bind_modes
-from repro.models.layers import KVCache
+from repro.models.layers import (
+    KVCache,
+    PagedKVCache,
+    paged_scatter_rows,
+    paged_view,
+)
 from repro.serve.engine import row_select as _sel  # the masked-step freeze
 
 
 def _is_kv(x) -> bool:
-    return isinstance(x, KVCache)
+    """Cache nodes of either layout — skipped by snapshot, rolled back by
+    the pos-mask select rather than the substep stack."""
+    return isinstance(x, (KVCache, PagedKVCache))
 
 
 def _gather_substep(stacked, n_acc, ax: int):
@@ -95,11 +102,54 @@ def _roll_kv(axn: KVCache, c0: KVCache, cf: KVCache, n_acc, active) -> KVCache:
                         axn, rolled, c0)
 
 
+def _roll_paged_one(c0: PagedKVCache, cf: PagedKVCache, keep_last, mask):
+    """Roll one un-stacked paged node: mix the pre-round and post-verify
+    *virtual views* under the same pos mask the dense rollback uses, then
+    scatter every row's mixed content back through the (unchanged) page
+    table.  Shared prefix pages receive identical duplicate writes (their
+    content is settled before the round and the mask never flips it), and
+    unmapped rows write scratch — so the scatter is order-independent."""
+    k0, v0, ks0, vs0 = paged_view(c0)
+    kf, vf, ksf, vsf = paged_view(cf)
+
+    def mix(fresh, old):
+        if fresh is None:
+            return None
+        m = mask.reshape(mask.shape + (1,) * (fresh.ndim - mask.ndim))
+        return jnp.where(m, old, fresh)
+
+    return paged_scatter_rows(
+        cf, mix(kf, k0), mix(vf, v0), mix(ksf, ks0), mix(vsf, vs0),
+        pos=jnp.where(mask, c0.pos, cf.pos), length=keep_last + 1)
+
+
+def _roll_paged(axn: PagedKVCache, c0: PagedKVCache, cf: PagedKVCache,
+                n_acc, active) -> PagedKVCache:
+    """Paged twin of :func:`_roll_kv`.  The verify chain appended through
+    the page table (prepare_step pre-allocated and COW-forked pages for all
+    k+1 writes), so rejected entries live in private pages: restoring them
+    is a per-row virtual mix + scatter.  Per-row leaves (pos/length) then
+    freeze inactive rows via the usual select; pool leaves are SHARED —
+    inactive rows' cleared tables already routed their writes to scratch."""
+    shape = [1] * c0.length.ndim
+    shape[axn.length] = n_acc.shape[0]
+    keep_last = c0.length + n_acc.reshape(shape)
+    mask = cf.pos > keep_last[..., None]
+    if c0.length.ndim == 2:  # layer-stacked group
+        rolled = jax.vmap(_roll_paged_one)(c0, cf, keep_last, mask)
+    else:
+        rolled = _roll_paged_one(c0, cf, keep_last, mask)
+    return jax.tree.map(lambda ax, new, old: _sel(ax, new, old, active),
+                        axn, rolled, c0)
+
+
 def rollback(axes, state0, state_fin, snaps, n_acc, active):
     """One compiled rollback-select over the whole DecodeState pytree."""
 
     def roll(axn, s0n, finn, snapn):
-        if _is_kv(axn):
+        if isinstance(axn, PagedKVCache):
+            return _roll_paged(axn, s0n, finn, n_acc, active)
+        if isinstance(axn, KVCache):
             return _roll_kv(axn, s0n, finn, n_acc, active)
         return _sel(axn, _gather_substep(snapn, n_acc, axn), s0n, active)
 
