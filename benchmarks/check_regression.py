@@ -21,6 +21,12 @@ noise profile:
   including the ring-wrap/COW cell, strictly more in-flight concurrency
   than the dense-equivalent pool admits, prefix pages shared, tiered
   residual inside its budget) — no wall-clock cells at all.
+* **obs** (``--obs-new``): machine-independent *semantic* invariants of
+  the observability sweep (traced arms emit bit-identical tokens with
+  identical compile counts, traces are lossless + Chrome-schema-valid +
+  replayable through the scheduler invariant harness, median steady-state
+  overhead under 5%) — the only wall-clock number is the overhead *ratio*
+  of two arms on the same host, so it travels.
 * **adapt** (``--adapt-new``): machine-independent *semantic* invariants of
   the runtime-adaptation sweep (adapted meets its SLO, the cheap static
   plan violates it, reconfiguration happened with zero recompiles) — the
@@ -419,6 +425,73 @@ def page_semantics(doc: dict) -> list[str]:
     return problems
 
 
+#: allowed median steady-state wall ratio, traced / untraced — tracing is
+#: host-side dict appends against multi-ms jit dispatches, so anything
+#: above 5% means an emit site leaked into the hot path
+OBS_OVERHEAD_LIMIT = 1.05
+
+
+def obs_semantics(doc: dict) -> list[str]:
+    """Machine-independent invariants of a fresh BENCH_obs.json — the
+    tracing contract (repro.obs):
+
+      * every cell's traced arm emits bit-identical tokens and compiles
+        exactly as many step variants as the untraced arm (tracing must be
+        invisible to jit), with zero decode/spec recompiles mid-run
+        (prefill recompiles are legitimate: one variant per ragged prompt
+        length);
+      * every trace is lossless (0 dropped), non-empty, exports a
+        schema-valid Chrome document, and replays through the scheduler
+        invariant harness (tests/scheduler_model.py consumer mode);
+      * the median steady-state overhead ratio across cells stays under
+        ``OBS_OVERHEAD_LIMIT`` (each cell's ratio is a median of paired
+        per-rep ratios; the median across cells absorbs single-cell
+        timing noise).
+
+    Returns a list of violation strings (empty = pass).
+    """
+    problems = []
+    cells = doc.get("cells", [])
+    if not cells:
+        return ["no obs cells found"]
+    for want in ("plain", "spec", "full"):
+        if not any(c.get("cell") == want for c in cells):
+            problems.append(f"no {want} obs cell found")
+    for c in cells:
+        key = f"obs {c.get('cell')}"
+        if not c.get("tokens_equal"):
+            problems.append(f"{key}: traced tokens diverged from untraced "
+                            "(tracing changed the computation)")
+        if not c.get("compiles_equal"):
+            problems.append(
+                f"{key}: compile counts differ traced vs untraced "
+                f"({c.get('compiles_traced')} vs "
+                f"{c.get('compiles_untraced')}) — tracing is jit-visible")
+        if c.get("steady_recompiles", 0) != 0:
+            problems.append(
+                f"{key}: {c.get('steady_recompiles')} mid-run decode/spec "
+                f"recompiles detected ({c.get('recompiles')})")
+        if c.get("n_events", 0) < 1:
+            problems.append(f"{key}: empty trace")
+        if c.get("dropped", 0) != 0:
+            problems.append(f"{key}: {c.get('dropped')} events dropped "
+                            "(ring too small — trace not replayable)")
+        if not c.get("chrome_valid"):
+            problems.append(f"{key}: Chrome export failed validation: "
+                            f"{c.get('chrome_problems')}")
+        if not c.get("replay_ok"):
+            problems.append(f"{key}: event stream failed the scheduler "
+                            "invariant replay")
+    ratios = sorted(c.get("overhead_ratio", 0.0) for c in cells)
+    median = ratios[len(ratios) // 2] if len(ratios) % 2 else (
+        ratios[len(ratios) // 2 - 1] + ratios[len(ratios) // 2]) / 2
+    if median > OBS_OVERHEAD_LIMIT:
+        problems.append(
+            f"median tracing overhead {median:.3f} above "
+            f"{OBS_OVERHEAD_LIMIT} (per-cell ratios {ratios})")
+    return problems
+
+
 def compare(
     baseline: dict[tuple, float],
     new: dict[tuple, float],
@@ -539,6 +612,14 @@ def main(argv: list[str] | None = None) -> int:
         "shared, tiered residual inside budget)",
     )
     ap.add_argument(
+        "--obs-new",
+        default="",
+        help="fresh BENCH_obs.json; checked for the machine-independent "
+        "tracing invariants (traced arm bit-identical tokens and compile "
+        "counts, lossless schema-valid replayable traces, median overhead "
+        "inside the 5% gate)",
+    )
+    ap.add_argument(
         "--adapt-strict",
         action="store_true",
         help="also fail on the adapted-vs-safe throughput invariant "
@@ -625,6 +706,16 @@ def main(argv: list[str] | None = None) -> int:
             print("page (semantics): ok (paged bit-identical to dense incl. "
                   "wrap+COW, concurrency beats dense-equivalent admission "
                   "under eviction, prefixes shared, tiers inside budget)")
+        ok &= not problems
+    if args.obs_new:
+        ran = True
+        problems = obs_semantics(load(args.obs_new))
+        for p in problems:
+            print(f"obs (semantics): FAIL {p}")
+        if not problems:
+            print("obs (semantics): ok (traced arms bit-identical with "
+                  "equal compile counts, traces lossless + schema-valid + "
+                  "replayable, median overhead inside the gate)")
         ok &= not problems
     if args.spec_new:
         ran = True

@@ -533,6 +533,57 @@ def page_section() -> list[str]:
     ]
 
 
+BENCH_OBS = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json")
+
+
+def load_bench_obs(path: str = BENCH_OBS) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def obs_table(doc: dict) -> list[str]:
+    out = ["| cell | tokens equal | compiles (decode/spec) | overhead "
+           "| events | chrome | replay |",
+           "|---|---|---|---|---|---|---|"]
+    for c in doc.get("cells", []):
+        comp = "/".join("-" if v is None else str(v)
+                        for v in c["compiles_traced"])
+        comp_ok = "" if c["compiles_equal"] else " (**≠ untraced**)"
+        out.append(
+            f"| {c['cell']} "
+            f"| {'yes' if c['tokens_equal'] else '**no**'} "
+            f"| {comp}{comp_ok} "
+            f"| {c['overhead_ratio']:.3f}x "
+            f"| {c['n_events']} ({c['dropped']} dropped) "
+            f"| {'valid' if c['chrome_valid'] else '**invalid**'} "
+            f"| {'ok' if c['replay_ok'] else '**fail**'} |")
+    return out
+
+
+def obs_section() -> list[str]:
+    doc = load_bench_obs()
+    if doc is None:
+        return ["### Obs sweep\n",
+                "_BENCH_obs.json not found — run "
+                "`python -m benchmarks.obs_sweep` first._\n"]
+    return [
+        f"### Obs sweep (BENCH_obs.json, host={doc['host_backend']}, "
+        f"median overhead {doc['overhead_ratio_median']:.3f}x)\n",
+        "Tracing (`repro.obs`): each serving configuration runs untraced "
+        "(NULL_TRACER) and traced on identical workloads.  The traced arm "
+        "must emit bit-identical tokens with identical compile counts "
+        "(tracing is host-side only — nothing reaches jit), and its event "
+        "stream must be lossless, export a schema-valid Chrome trace, and "
+        "replay through the scheduler invariant harness "
+        "(tests/scheduler_model.py consumer mode).  Overhead is the "
+        "median of per-rep paired wall ratios, gated at 1.05x:\n",
+        "\n".join(obs_table(doc)),
+        "",
+    ]
+
+
 def generated_sections() -> str:
     parts: list[str] = []
     doc = load_bench_plan()
@@ -561,6 +612,7 @@ def generated_sections() -> str:
     parts.extend(tenant_section())
     parts.extend(tile_section())
     parts.extend(page_section())
+    parts.extend(obs_section())
     recs = load("paper_baseline")
     if recs:
         n_ok = sum(1 for r in recs.values() if r["status"] == "ok")

@@ -1,0 +1,201 @@
+"""Observability sweep: the cost and the fidelity of tracing (repro.obs).
+
+Runs each serving configuration twice on identical seeded workloads — once
+on the no-op NULL_TRACER, once with ``ServeConfig(trace=TraceConfig())`` —
+and records the two tentpole contracts as machine-checkable cells
+(``BENCH_obs.json``, gated by ``check_regression --obs-new``):
+
+  * **zero jit-visible cost**: the traced arm must emit bit-identical
+    tokens and compile exactly as many step variants as the untraced arm
+    (tracing is host-side Python; nothing it does may reach jit), and its
+    steady-state wall time must stay within the overhead gate (median
+    overhead_ratio <= 1.05 across cells; each cell's ratio is the median
+    of per-rep PAIRED ratios, so host-load drift cancels);
+  * **fidelity**: the recorded stream must be lossless (0 dropped), export
+    a schema-valid Chrome trace (``validate_chrome``), and replay through
+    the scheduler invariant harness (tests/scheduler_model.py consumer
+    mode, ``check_replay``) — the trace is a checkable artifact, not a
+    best-effort log.
+
+Cells: ``plain`` (continuous batching only), ``spec`` (self-speculative
+rounds), ``full`` (multi-tenant priority scheduling + paged KV cache +
+speculation — the acceptance-criterion combination; no slo=, which the
+engine refuses alongside speculate= and tenants=).
+
+    PYTHONPATH=src python -m benchmarks.obs_sweep            # full sweep
+    PYTHONPATH=src python -m benchmarks.obs_sweep --quick    # CI subset
+    PYTHONPATH=src python -m benchmarks.make_experiments_md --write
+
+Emits ``BENCH_obs.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import statistics
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.serve_sweep import build_tiny
+from repro.obs import TraceConfig, validate_chrome
+from repro.serve import (
+    CacheConfig,
+    RequestClass,
+    SchedulingConfig,
+    ServeConfig,
+    ServeEngine,
+    Tenant,
+    class_requests,
+    ragged_requests,
+)
+from repro.spec import SpecConfig
+
+# the replay harness lives with the tests, not the package
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+from scheduler_model import check_replay  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs.json")
+
+TENANTS = (Tenant("interactive", priority=0, share=2.0),
+           Tenant("bulk", priority=2, share=1.0))
+CLASSES = (RequestClass("chat", slo_steps=10, prompt_len=6, max_new=5),
+           RequestClass("batch", prompt_len=10, max_new=8))
+
+
+def _cell_configs(vocab: int):
+    """(name, base ServeConfig, request factory) per cell.  The factory
+    takes a rid base so repeated batches on one engine stay replayable
+    (every rid's lifecycle must be fresh)."""
+    def plain_reqs(base: int):
+        rng = np.random.default_rng(0)
+        return [dataclasses.replace(r, rid=base + r.rid)
+                for r in ragged_requests(6, vocab, 10, 8, rng)]
+
+    def tenant_reqs(base: int):
+        rng = np.random.default_rng(0)
+        reqs = class_requests(CLASSES[1], TENANTS[1], 3, vocab, rng,
+                              rid_base=base)
+        reqs += class_requests(CLASSES[0], TENANTS[0], 3, vocab, rng,
+                               rid_base=base + 100)
+        return reqs
+
+    plain = ServeConfig(batch_slots=2, max_len=26)
+    spec = ServeConfig(batch_slots=2, max_len=26,
+                       spec=SpecConfig(k=2, draft_shift=1))
+    full = ServeConfig(
+        batch_slots=3, max_len=26,
+        scheduling=SchedulingConfig(tenants=TENANTS, classes=CLASSES),
+        spec=SpecConfig(k=2, draft_shift=1),
+        cache=CacheConfig(layout="paged", page_size=4))
+    return [("plain", plain, plain_reqs),
+            ("spec", spec, plain_reqs),
+            ("full", full, tenant_reqs)]
+
+
+def _timed_batch(eng: ServeEngine, reqs) -> float:
+    t0 = time.perf_counter()
+    eng.generate_batch(reqs)
+    return time.perf_counter() - t0
+
+
+def sweep_cell(model, params, name: str, cfg: ServeConfig, mk_reqs,
+               reps: int) -> dict:
+    e_off = ServeEngine(model, params, config=cfg)
+    e_on = ServeEngine(model, params, config=dataclasses.replace(
+        cfg, trace=TraceConfig()))
+    # warm batches: compiles + the token-identity comparison
+    outs_off = e_off.generate_batch(mk_reqs(0))
+    outs_on = e_on.generate_batch(mk_reqs(0))
+    # timed reps are PAIRED: each rep times the two arms back to back on
+    # the identical batch, and the cell's overhead is the median of the
+    # per-rep ratios — host-load drift moves both walls of a pair together
+    # and cancels in the ratio, where a ratio of two independent
+    # best-of-reps walls would keep it
+    walls_off, walls_on = [], []
+    for rep in range(1, reps + 1):
+        walls_off.append(_timed_batch(e_off, mk_reqs(rep * 1000)))
+        walls_on.append(_timed_batch(e_on, mk_reqs(rep * 1000)))
+    wall_off, wall_on = min(walls_off), min(walls_on)
+    ratio = statistics.median(on / off
+                              for on, off in zip(walls_on, walls_off))
+
+    chrome_problems = validate_chrome(e_on.tracer.chrome())
+    try:
+        check_replay(e_on)
+        replay_ok = True
+    except AssertionError:
+        replay_ok = False
+    compiles_off = [e_off.decode_compile_count, e_off.spec_compile_count]
+    compiles_on = [e_on.decode_compile_count, e_on.spec_compile_count]
+    # recompiles by cause: prefill ones are legitimate (the prefill jit
+    # specializes per ragged prompt length); decode/spec-round growth
+    # mid-run would mean tracing perturbed the compiled step
+    recompiles: dict[str, int] = {}
+    for e in e_on.tracer.events:
+        if e.kind == "recompile":
+            sizes = e.data["sizes"]
+            recompiles[e.cause] = (recompiles.get(e.cause, 0)
+                                   + sizes["after"] - sizes["before"])
+    return {
+        "cell": name,
+        "requests": len(outs_off),
+        "tokens": sum(len(v) for v in outs_off.values()),
+        "tokens_equal": outs_off == outs_on,
+        "compiles_untraced": compiles_off,
+        "compiles_traced": compiles_on,
+        "compiles_equal": compiles_off == compiles_on,
+        "wall_untraced_s": round(wall_off, 4),
+        "wall_traced_s": round(wall_on, 4),
+        "overhead_ratio": round(ratio, 4),
+        "n_events": len(e_on.tracer.events),
+        "dropped": e_on.tracer.dropped,
+        "chrome_valid": chrome_problems == [],
+        "chrome_problems": chrome_problems[:5],
+        "replay_ok": replay_ok,
+        "recompiles": recompiles,
+        "steady_recompiles": sum(v for k, v in recompiles.items()
+                                 if k != "prefill"),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI subset: fewer timed reps per arm")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    cfg, model, params = build_tiny(args.arch)
+    reps = 3 if args.quick else 5
+    cells = []
+    for name, scfg, mk in _cell_configs(cfg.vocab):
+        c = sweep_cell(model, params, name, scfg, mk, reps)
+        cells.append(c)
+        print(f"{name}: tokens_equal={c['tokens_equal']} "
+              f"compiles={c['compiles_traced']} "
+              f"overhead={c['overhead_ratio']:.3f} "
+              f"events={c['n_events']} dropped={c['dropped']} "
+              f"chrome_valid={c['chrome_valid']} replay_ok={c['replay_ok']}")
+    doc = {
+        "host_backend": jax.default_backend(),
+        "arch": args.arch,
+        "reps": reps,
+        "overhead_ratio_median": round(statistics.median(
+            c["overhead_ratio"] for c in cells), 4),
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} (median overhead "
+          f"{doc['overhead_ratio_median']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

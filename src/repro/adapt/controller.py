@@ -31,6 +31,7 @@ from typing import Any
 
 from repro.adapt.probe import GradDriftProbe
 from repro.adapt.runtime_policy import ModeTable
+from repro.obs import NULL_TRACER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,11 +68,20 @@ class Observation:
 
 
 class HysteresisController:
+    #: trace sink + instance label (repro.obs) — the engine swaps in its
+    #: live tracer and names each controller ("adapt", "adapt/<tenant>",
+    #: "accept"); the class defaults keep standalone controllers emit-free
+    tracer = NULL_TRACER
+    name = "adapt"
+
     def __init__(self, slo: SLO, cooldown: int = 2):
         self.slo = slo
         self.cooldown = max(int(cooldown), 0)
         self.history: list[Observation] = []
         self._since_shift = self.cooldown  # first observation may act
+        #: why the last observation decided what it did — the cause stamp
+        #: the engine copies onto mode_switch / draft_shift trace events
+        self.last_cause: str | None = None
 
     @property
     def up_shifts(self) -> int:
@@ -97,16 +107,32 @@ class HysteresisController:
         if err_down is None:
             err_down = err
         decision = 0
-        if self._since_shift >= self.cooldown:
+        cause = "hold"
+        if self._since_shift < self.cooldown:
+            cause = "cooldown"
+        else:
             down_limit = self.slo.max_err * self.slo.down_factor
-            if (self.slo.target_ms is not None and step_ms is not None
-                    and step_ms > self.slo.target_ms):
+            relaxed = (self.slo.target_ms is not None and step_ms is not None
+                       and step_ms > self.slo.target_ms)
+            if relaxed:
                 # latency pressure: spend accuracy margin, never the SLO (iii)
                 down_limit = self.slo.max_err
             if err > self.slo.max_err and can_up:
                 decision = +1
+                cause = "err_violation"
             elif err_down <= down_limit and can_down:
                 decision = -1
+                # distinguish "the dead band cleared on its own" from "the
+                # latency term spent the margin" — the Why of the trace
+                cause = ("latency_pressure"
+                         if relaxed and err_down > self.slo.max_err
+                         * self.slo.down_factor else "clean_streak")
+        self.last_cause = cause
+        if self.tracer.enabled:
+            self.tracer.emit(
+                "adapt_decision", cause=cause, controller=self.name,
+                decision=decision, err=float(err), err_down=float(err_down),
+                step_ms=step_ms, can_up=can_up, can_down=can_down)
         self.history.append(Observation(step, float(err), float(err_down),
                                         step_ms, decision))
         if decision:

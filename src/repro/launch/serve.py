@@ -143,6 +143,13 @@ def main() -> None:
     ap.add_argument("--tier-budget", type=float, default=0.0,
                     help="closed-loop residual budget for the tier "
                          "controller (0 = open loop at full depth)")
+    ap.add_argument("--trace", action="store_true",
+                    help="structured tracing (repro.obs): per-request spans "
+                         "+ engine/decision events, printed as a precision "
+                         "timeline and profile at exit")
+    ap.add_argument("--trace-out", default="",
+                    help="write the trace as Chrome-trace/Perfetto JSON to "
+                         "this path (implies --trace)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -189,12 +196,13 @@ def main() -> None:
     dt = time.perf_counter() - t0
     for rid in sorted(outs):
         print(f"req {rid}: {outs[rid]}")
-    print(f"plans:\n{eng.describe_plans()}")
+    # one coherent engine report: plans / adaptation / speculation / tenancy
+    # / cache (+ trace and profile when tracing) from the consolidated
+    # ServeEngine.describe() surface
+    print(eng.format_describe())
     if args.adapt:
-        print(f"adaptation: {eng.describe_adaptation()}")
         print(f"compiled decode-step variants: {eng.decode_compile_count}")
     if args.speculate:
-        print(f"speculation: {eng.describe_speculation()}")
         print(f"compiled spec-round variants: {eng.spec_compile_count}")
     stats = plan_cache_stats()
     print(f"plan cache: {stats.entries} entries, "
@@ -203,10 +211,12 @@ def main() -> None:
     print(f"{total} tokens in {dt:.2f}s ({total/dt:.1f} tok/s incl compile; "
           f"kv={cfg.kv_cache_dtype}; slots={eng.config.batch_slots})")
     print(eng.metrics.format_summary())
-    if args.paged:
-        print(f"cache: {eng.describe_cache()}")
-    if args.multi_tenant:
-        print(f"tenancy:\n{eng.describe_tenancy()}")
+    if eng.tracer.enabled:
+        print(f"precision timeline:\n{eng.tracer.format_timeline()}")
+        if args.trace_out:
+            doc = eng.tracer.export_chrome(args.trace_out)
+            print(f"trace: {len(doc['traceEvents'])} Chrome events "
+                  f"-> {args.trace_out}")
 
 
 if __name__ == "__main__":

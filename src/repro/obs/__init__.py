@@ -1,0 +1,38 @@
+"""repro.obs — unified tracing, precision timelines, and profiling hooks.
+
+Standalone by design: this package imports nothing from repro.serve /
+repro.adapt / repro.spec, so every serving component can hold a tracer
+without import cycles.  See DESIGN.md section "Observability"."""
+from repro.obs.export import (
+    span_violations,
+    to_chrome,
+    to_prometheus,
+    validate_chrome,
+    write_chrome,
+)
+from repro.obs.profile import PhaseProfiler, PhaseStats
+from repro.obs.timeline import format_timeline, precision_timeline
+from repro.obs.tracer import (
+    NULL_TRACER,
+    Event,
+    NullTracer,
+    TraceConfig,
+    Tracer,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "Event",
+    "NullTracer",
+    "PhaseProfiler",
+    "PhaseStats",
+    "TraceConfig",
+    "Tracer",
+    "format_timeline",
+    "precision_timeline",
+    "span_violations",
+    "to_chrome",
+    "to_prometheus",
+    "validate_chrome",
+    "write_chrome",
+]

@@ -16,6 +16,14 @@
                   speculative acceptance, per-tenant SLO attainment /
                   fairness (share vs entitlement), page occupancy / tier mix
 
+Tracing: ``ServeConfig(trace=repro.obs.TraceConfig(...))`` records typed
+events (request spans, engine dispatches, controller decisions with causes)
+into ``engine.tracer`` — exportable as a Chrome trace, Prometheus text, or
+the merged precision timeline, and replayable through the
+tests/scheduler_model.py invariant harness.  Tracing off (the default) is
+the shared no-op NULL_TRACER: identical compiles and dispatches, zero
+jit-visible cost (DESIGN.md section Observability).
+
 ``ServeEngine(model, params, config=ServeConfig(...))`` is the documented
 construction path (the flat kwargs remain as a deprecation shim).
 ``AdaptConfig(slo=...)`` closes the runtime-precision loop (repro.adapt);

@@ -103,6 +103,9 @@ class ServeConfig:
     adapt: AdaptConfig = dataclasses.field(default_factory=AdaptConfig)
     spec: Any = None  # repro.spec.SpecConfig | None
     cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    #: repro.obs.TraceConfig | True | None — None keeps the engine on the
+    #: no-op NULL_TRACER (zero jit-visible cost); True means default knobs
+    trace: Any = None
 
     def __post_init__(self):
         if self.batch_slots < 1:
@@ -121,7 +124,8 @@ class ServeConfig:
                     tenants=None, classes=None,
                     scheduler_policy: str = "priority", preempt: bool = True,
                     aging_steps: int = 8, min_quantum: int = 2,
-                    cache: CacheConfig | None = None) -> "ServeConfig":
+                    cache: CacheConfig | None = None,
+                    trace=None) -> "ServeConfig":
         """The deprecation shim: the flat pre-ServeConfig kwarg surface of
         ``ServeEngine.__init__``, regrouped.  Legacy call sites keep working
         through this mapping (the full pre-redesign test suite passes
@@ -140,6 +144,7 @@ class ServeConfig:
                               controller=controller),
             spec=speculate,
             cache=cache or CacheConfig(),
+            trace=trace,
         )
 
     @classmethod
@@ -171,6 +176,11 @@ class ServeConfig:
             tier_policy=tier,
             prefix_sharing=not getattr(args, "no_prefix_sharing", False),
         )
+        trace = None
+        if getattr(args, "trace", False) or getattr(args, "trace_out", ""):
+            from repro.obs import TraceConfig
+
+            trace = TraceConfig(out=getattr(args, "trace_out", "") or None)
         slots = args.slots or max(args.requests, 1)
         return cls(
             batch_slots=slots,
@@ -183,4 +193,5 @@ class ServeConfig:
             adapt=AdaptConfig(slo=slo, adapt_every=args.adapt_every),
             spec=speculate,
             cache=cache,
+            trace=trace,
         )

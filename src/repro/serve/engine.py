@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import LanguageModel
+from repro.obs import NULL_TRACER, PhaseProfiler, TraceConfig, Tracer
 from repro.serve.config import ServeConfig
 from repro.serve.metrics import ServeMetrics
 from repro.serve.paged import make_layout
@@ -197,6 +198,17 @@ class ServeEngine:
         # metrics first: its plan-cache snapshot must predate phase planning
         # so plan_cache_delta() counts the plans this engine triggers
         self.metrics = ServeMetrics(batch_slots)
+        # -- tracing (repro.obs): fixed at construction.  Off means the
+        # shared no-op NULL_TRACER everywhere — every emit site is guarded
+        # on ``tracer.enabled`` and never touches jit arguments, so traced
+        # and untraced engines compile and dispatch identically (pinned by
+        # tests/test_obs.py and the obs_sweep overhead gate)
+        if cfg.trace:
+            self.tracer = Tracer(cfg.trace if isinstance(cfg.trace, TraceConfig)
+                                 else None)
+        else:
+            self.tracer = NULL_TRACER
+        self.profiler = PhaseProfiler(self.tracer)
         if accuracy is not None:
             # Per-phase planning (DESIGN.md section Serving): decode GEMMs
             # see M = batch_slots at a tightened budget, prefill GEMMs see
@@ -229,6 +241,7 @@ class ServeEngine:
             batch_slots, max_len, tenants=tenants, classes=classes,
             policy=scheduler_policy, preempt=preempt,
             aging_steps=aging_steps, min_quantum=min_quantum)
+        self.scheduler.tracer = self.tracer
         self.metrics.set_tenant_shares(
             {name: t.share for name, t in self.scheduler.tenants.items()})
         #: rid -> (parked per-slot state row (device pytree), cache length)
@@ -239,6 +252,7 @@ class ServeEngine:
         #: engine never touches cache internals directly (repro.serve.paged)
         self.layout = make_layout(cfg.cache, self.model_decode,
                                   batch_slots, max_len)
+        self.layout.tracer = self.tracer
         self.state = self.layout.init()
         # solo-prefill template: one per-slot row, reused for every prefill.
         # Always the *dense* layout — the batch-1 dense row is the exchange
@@ -299,12 +313,16 @@ class ServeEngine:
                         target_ms=slo.target_ms,
                         down_factor=slo.down_factor)
                     self.tenant_tables[name] = make_table()
-                    self.tenant_ctrl[name] = HysteresisController(t_slo)
+                    ctrl = HysteresisController(t_slo)
+                    ctrl.tracer, ctrl.name = self.tracer, f"adapt/{name}"
+                    self.tenant_ctrl[name] = ctrl
                 self.mode_table = None
                 self.controller = None
             else:
                 self.mode_table = make_table()
                 self.controller = controller or HysteresisController(slo)
+                self.controller.tracer = self.tracer
+                self.controller.name = "adapt"
             self.adapt_every = max(int(adapt_every), 1)
             self._step_modal = jax.jit(self._masked_step_modal)
             self._probe = jax.jit(self._probe_fn)
@@ -351,6 +369,9 @@ class ServeEngine:
         self._accept_ctrl = (
             AcceptanceController(spec, ladder, shift=self._draft_shift)
             if spec.adapt and ladder > 0 else None)
+        if self._accept_ctrl is not None:
+            self._accept_ctrl.controller.tracer = self.tracer
+            self._accept_ctrl.controller.name = "accept"
         self._spec_round = jax.jit(build_spec_round(
             self.model_decode, self._axes, spec.k,
             modal_verify=self.slo is not None))
@@ -412,6 +433,11 @@ class ServeEngine:
         self.metrics.on_submit(
             rid, tenant=t.tenant, rclass=t.rclass,
             slo_steps=rc.slo_steps, slo_ms=rc.slo_ms, step=t.submit_step)
+        if self.tracer.enabled:
+            self.tracer.emit(
+                "submit", rid=rid, step=t.submit_step, tenant=t.tenant,
+                rclass=t.rclass, prompt_len=len(t.prompt), budget=t.budget)
+            self.tracer.inc("submitted")
         return rid
 
     def step(self) -> list[tuple[int, int]]:
@@ -424,8 +450,9 @@ class ServeEngine:
         (rid, token) events in emission order."""
         events: list[tuple[int, int]] = []
         self.scheduler.tick()
+        self.tracer.step = self.scheduler.clock
         for victim in self.scheduler.plan_preemptions():
-            self._park_slot(victim)
+            self._park_slot(victim, cause="priority")
         self.layout.begin_admission()
         for slot, ticket in self.scheduler.admit(can_admit=self._can_admit):
             if slot < 0:
@@ -434,10 +461,16 @@ class ServeEngine:
                 # completion through metrics so summary()["completed"]
                 # agrees with drain()/scheduler.completed
                 self.metrics.on_done(ticket.rid, step=self.scheduler.clock)
+                if self.tracer.enabled:
+                    self.tracer.emit("done", rid=ticket.rid, slot=-1,
+                                     cause="zero_budget")
                 continue
             if ticket.tokens:
                 self._resume_slot(slot, ticket)
                 continue
+            if self.tracer.enabled:
+                self.tracer.emit("admit", rid=ticket.rid, slot=slot,
+                                 tenant=ticket.tenant, rclass=ticket.rclass)
             first = self._prefill_slot(slot, ticket)
             self.metrics.on_first_token(ticket.rid)
             events.append((ticket.rid, first))
@@ -489,8 +522,12 @@ class ServeEngine:
             victim = self.scheduler.page_victim()
             if victim is None or victim.slot is None:
                 victim = self.scheduler.by_slot[failed[0]]
-            self._park_slot(victim)
+            self._park_slot(victim, cause="page_pressure")
             self.metrics.on_page_evict()
+            if self.tracer.enabled:
+                self.tracer.emit("page_evict", rid=victim.rid,
+                                 cause="page_pressure")
+                self.tracer.inc("page_evictions")
 
     def _page_tick(self) -> None:
         """Post-step page accounting: occupancy/sharing stats every step,
@@ -509,13 +546,25 @@ class ServeEngine:
             self.state, lengths, self.metrics.decode_steps)
         if tstats is not None:
             self.metrics.on_page_tier(self.metrics.decode_steps, tstats)
+            if self.tracer.enabled:
+                self.tracer.emit(
+                    "tier_tick",
+                    cause="budget" if tp.budget else "open_loop",
+                    keep=tstats.get("keep"), depth=tstats.get("depth"),
+                    demoted=tstats.get("demoted"),
+                    promoted=tstats.get("promoted"),
+                    err=tstats.get("err"))
+                self.tracer.inc("tier_demotions", tstats.get("demoted", 0))
 
-    def _park_slot(self, victim: Ticket) -> None:
+    def _park_slot(self, victim: Ticket, cause: str = "priority") -> None:
         """Preempt a running request: gather its exact per-slot state row
         off the device (as a dense batch-1 row, whatever the layout), free
         the slot — and, paged, the row's pages — and requeue the ticket.
         Nothing is recomputed at resume — ``_resume_slot`` scatters this
-        row back, so the token stream continues bit-identically."""
+        row back, so the token stream continues bit-identically.  ``cause``
+        stamps the trace event ("priority" scheduler preemption vs
+        "page_pressure" eviction — the latter legally ignores the quantum,
+        which the replay harness accounts for by cause)."""
         slot = victim.slot
         self._parked[victim.rid] = (
             self.layout.gather_row(self.state, slot),
@@ -524,6 +573,10 @@ class ServeEngine:
         self._active[slot] = False
         self.scheduler.preempt(victim.rid)
         self.metrics.on_preempt(victim.rid)
+        if self.tracer.enabled:
+            self.tracer.emit("preempt", rid=victim.rid, slot=slot,
+                             cause=cause)
+            self.tracer.inc("preemptions")
 
     def _resume_slot(self, slot: int, ticket: Ticket) -> None:
         """Re-admit a preempted request: scatter its parked state row into
@@ -536,6 +589,9 @@ class ServeEngine:
         self._row_len[slot] = length
         self._active[slot] = True
         self._last_tok[slot] = ticket.tokens[-1]
+        if self.tracer.enabled:
+            self.tracer.emit("resume", rid=ticket.rid, slot=slot,
+                             cache_len=length)
 
     def _tenant_active(self) -> dict[str, int]:
         """Active slots per tenant right now — metrics attribution for the
@@ -595,8 +651,17 @@ class ServeEngine:
                 self.params, tokens, self.state, active)
         produced = np.asarray(next_tok)  # syncs the step
         self._last_step_ms = (time.perf_counter() - t0) * 1e3
+        n_active = int(self._active.sum())
         self.metrics.on_decode_step(
-            int(self._active.sum()), mode=label, tenant_active=tenant_active)
+            n_active, mode=label, tenant_active=tenant_active)
+        if self.tracer.enabled:
+            self.tracer.emit("decode_step", dur_ms=self._last_step_ms,
+                             n_active=n_active, mode=label)
+            self.tracer.set_gauge("active_slots", n_active)
+            self.profiler.record("decode", self._last_step_ms / 1e3,
+                                 tokens=n_active)
+            self.profiler.observe_cache("decode_step",
+                                        self.decode_compile_count)
         for slot in np.nonzero(self._active)[0]:
             ticket = self.scheduler.by_slot[int(slot)]
             tok = int(produced[slot])
@@ -654,6 +719,16 @@ class ServeEngine:
         self.metrics.on_spec_round(
             n_active, drafted=self.spec.k * n_active,
             accepted=accepted, emitted=emitted)
+        if self.tracer.enabled:
+            from repro.spec.rollout import trace_round
+
+            trace_round(self.tracer, k=self.spec.k, n_active=n_active,
+                        agreed=agreed, emitted=emitted,
+                        dur_ms=self._last_step_ms)
+            self.tracer.set_gauge("active_slots", n_active)
+            self.profiler.record("spec", self._last_step_ms / 1e3,
+                                 tokens=emitted)
+            self.profiler.observe_cache("spec_round", self.spec_compile_count)
         self._spec_window[0] += self.spec.k * n_active
         self._spec_window[1] += agreed
         if (self._accept_ctrl is not None
@@ -675,6 +750,12 @@ class ServeEngine:
         if self._accept_ctrl.shift != before:
             self.metrics.on_draft_shift(
                 self.metrics.spec_rounds, self._accept_ctrl.shift)
+            if self.tracer.enabled:
+                self.tracer.emit(
+                    "draft_shift", shift=self._accept_ctrl.shift,
+                    cause=self._accept_ctrl.controller.last_cause,
+                    reject_rate=1.0 - agreed / drafted)
+                self.tracer.inc("draft_shifts")
 
     @property
     def draft_shift(self) -> int:
@@ -711,6 +792,12 @@ class ServeEngine:
         if self._adapt and decision:
             if table.shift_all(decision, tag=self.metrics.decode_steps):
                 self.metrics.on_mode_switch()
+                if self.tracer.enabled:
+                    self.tracer.emit(
+                        "mode_switch", cause=self.controller.last_cause,
+                        direction=decision, mode=table.label(),
+                        sites={s: m.name for s, m in table.modes().items()})
+                    self.tracer.inc("mode_switches")
 
     def _adapt_tick_tenants(self) -> None:
         """One probe + controller observation *per tenant with active
@@ -746,6 +833,15 @@ class ServeEngine:
             if self._adapt and decision:
                 if table.shift_all(decision, tag=self.metrics.decode_steps):
                     self.metrics.on_mode_switch()
+                    if self.tracer.enabled:
+                        self.tracer.emit(
+                            "mode_switch",
+                            cause=self.tenant_ctrl[name].last_cause,
+                            direction=decision, tenant=name,
+                            mode=table.label(),
+                            sites={s: m.name
+                                   for s, m in table.modes().items()})
+                        self.tracer.inc("mode_switches")
 
     def drain(self) -> dict[int, list[int]]:
         """Step until queue and slots are empty; returns rid -> tokens for
@@ -758,19 +854,38 @@ class ServeEngine:
     # -- internals -----------------------------------------------------------
 
     def _prefill_slot(self, slot: int, ticket: Ticket) -> int:
+        t0 = time.perf_counter()
         logits, solo = self._prefill(
             self.params, jnp.asarray(ticket.prompt)[None, :], self._solo0)
         self.state = self.layout.scatter_row(
             self.state, solo, slot, prompt=ticket.prompt)
         self._row_len[slot] = len(ticket.prompt)
-        return int(jnp.argmax(logits[0, -1]))
+        first = int(jnp.argmax(logits[0, -1]))  # syncs the prefill
+        if self.tracer.enabled:
+            dur_s = time.perf_counter() - t0
+            self.tracer.emit("prefill", rid=ticket.rid, slot=slot,
+                             dur_ms=dur_s * 1e3,
+                             prompt_len=len(ticket.prompt))
+            self.profiler.record("prefill", dur_s,
+                                 tokens=len(ticket.prompt))
+            cache_size = getattr(self._prefill, "_cache_size", None)
+            self.profiler.observe_cache(
+                "prefill", cache_size() if callable(cache_size) else None)
+        return first
 
     def _emit(self, ticket: Ticket, slot: int, tok: int) -> None:
         ticket.tokens.append(tok)
         self.metrics.on_token(ticket.rid)
+        if self.tracer.enabled:
+            self.tracer.emit("token", rid=ticket.rid, slot=slot)
+            self.tracer.inc("tokens_out")
         if len(ticket.tokens) >= ticket.budget:
             self.scheduler.complete(ticket.rid)
             self.metrics.on_done(ticket.rid, step=self.scheduler.clock)
+            if self.tracer.enabled:
+                self.tracer.emit("done", rid=ticket.rid, slot=slot,
+                                 cause="budget")
+                self.tracer.inc("completed")
             self._active[slot] = False
             # completion frees the row's pages back to the pool (dense: no-op)
             self.state = self.layout.free_row(self.state, slot)
@@ -781,7 +896,45 @@ class ServeEngine:
 
     # -- reporting / compat --------------------------------------------------
 
+    def describe(self) -> dict[str, str]:
+        """The consolidated reporting surface: one dict with every
+        subsystem's description (plans / adaptation / speculation / tenancy
+        / cache — plus tracing/profiling when tracing is on).  The
+        ``describe_*`` helpers below are thin per-key wrappers kept for the
+        pre-obs API; ``launch/serve`` prints :meth:`format_describe`."""
+        out = {
+            "plans": self._describe_plans(),
+            "adaptation": self._describe_adaptation(),
+            "speculation": self._describe_speculation(),
+            "tenancy": self._describe_tenancy(),
+            "cache": self._describe_cache(),
+        }
+        if self.tracer.enabled:
+            out["trace"] = self.tracer.describe()
+            out["profile"] = self.profiler.describe()
+        return out
+
+    def format_describe(self) -> str:
+        """One coherent engine report block (headers + sections)."""
+        return "\n".join(f"-- {key} --\n{body}"
+                         for key, body in self.describe().items())
+
     def describe_plans(self) -> str:
+        return self.describe()["plans"]
+
+    def describe_speculation(self) -> str:
+        return self.describe()["speculation"]
+
+    def describe_tenancy(self) -> str:
+        return self.describe()["tenancy"]
+
+    def describe_adaptation(self) -> str:
+        return self.describe()["adaptation"]
+
+    def describe_cache(self) -> str:
+        return self.describe()["cache"]
+
+    def _describe_plans(self) -> str:
         if not self.plans:
             return "unplanned (explicit policy)"
         return "\n".join(f"{op}: {p.describe()}" for op, p in self.plans.items())
@@ -805,7 +958,7 @@ class ServeEngine:
         cache_size = getattr(self._spec_round, "_cache_size", None)
         return cache_size() if callable(cache_size) else None
 
-    def describe_speculation(self) -> str:
+    def _describe_speculation(self) -> str:
         if self.spec is None:
             return "speculation off (no speculate=)"
         s = self.metrics.summary()
@@ -825,7 +978,7 @@ class ServeEngine:
             + ctrl
         )
 
-    def describe_tenancy(self) -> str:
+    def _describe_tenancy(self) -> str:
         """Scheduler configuration + per-tenant fairness report."""
         sch = self.scheduler
         head = (
@@ -839,7 +992,7 @@ class ServeEngine:
         body = self.metrics.format_tenants()
         return head + ("\n" + body if body else "")
 
-    def describe_adaptation(self) -> str:
+    def _describe_adaptation(self) -> str:
         if self.tenant_tables:
             lines = []
             for name in sorted(self.tenant_tables):
@@ -865,7 +1018,7 @@ class ServeEngine:
             f"timeline {timeline}"
         )
 
-    def describe_cache(self) -> str:
+    def _describe_cache(self) -> str:
         """One-line KV layout report (layout name, pools, tiers, sharing)."""
         return self.layout.describe()
 

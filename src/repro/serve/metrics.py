@@ -108,6 +108,11 @@ class ServeMetrics:
 
     def _mark(self) -> float:
         t = self.clock()
+        if self._t_last_event is not None and t < self._t_last_event:
+            # perf_counter is monotonic, but an injected clock (tests) or a
+            # platform regression must never mint negative latencies /
+            # TTFTs — clamp every stamp to the last one seen
+            t = self._t_last_event
         if self._t_first_event is None:
             self._t_first_event = t
         self._t_last_event = t

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.adapt.pages import HOT, PageTierController
+from repro.obs import NULL_TRACER
 from repro.models.layers import (
     KVCache,
     PagedKVCache,
@@ -421,6 +422,8 @@ class KVLayout:
 
     name = "abstract"
     axes = None
+    #: trace sink (repro.obs) — the engine swaps in its live tracer
+    tracer = NULL_TRACER
 
     def init(self):
         raise NotImplementedError
@@ -675,6 +678,8 @@ class PagedLayout(KVLayout):
         n = len(prompt) if prompt is not None else int(length)
         keys = self._keys(prompt)
         write_tbls = []
+        hits0 = (sum(g.pool.shared_hits for g in self.groups)
+                 if self.tracer.enabled else 0)
         for g in self.groups:
             g.pool.free_row(slot)  # drop any stale mapping (defensive no-op)
             wt = g.pool.attach(slot, n, keys)
@@ -683,6 +688,12 @@ class PagedLayout(KVLayout):
                     "page pool exhausted inside scatter_row — the admission "
                     "gate should have reserved these pages")
             write_tbls.append(jnp.asarray(wt))
+        if self.tracer.enabled:
+            hits = sum(g.pool.shared_hits for g in self.groups) - hits0
+            if hits:
+                self.tracer.emit("prefix_share", slot=slot,
+                                 cause="prompt_prefix", pages=hits)
+                self.tracer.inc("prefix_shared_pages", hits)
         self._dirty = True
         state = self._sync(state)
         return self._scatter(state, row, jnp.int32(slot), tuple(write_tbls))
@@ -707,6 +718,11 @@ class PagedLayout(KVLayout):
         for g in self.groups:
             need = g.pool.peek_needed(n_tokens, keys)
             if g.pool.available() < need:
+                if self.tracer.enabled:
+                    self.tracer.emit(
+                        "admit_refuse", cause="no_free_pages",
+                        needed=need, available=g.pool.available())
+                    self.tracer.inc("admit_refusals")
                 return False
             needed.append(need)
         for g, need in zip(self.groups, needed):
@@ -733,6 +749,12 @@ class PagedLayout(KVLayout):
                     ok = False
                     break
                 copies.extend((gi, s, d) for s, d in pairs)
+                if pairs and self.tracer.enabled:
+                    for s, d in pairs:
+                        self.tracer.emit(
+                            "cow_fork", slot=slot, cause="shared_page_write",
+                            group=gi, src=s, dst=d)
+                    self.tracer.inc("cow_forks", len(pairs))
             if not ok:
                 failed.append(slot)
         self._dirty = True

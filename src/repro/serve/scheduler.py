@@ -50,6 +50,7 @@ import math
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
 from repro.serve.tenancy import (RequestClass, Tenant, normalize_classes,
                                  normalize_tenants)
 
@@ -121,6 +122,10 @@ def ragged_requests(n: int, vocab: int, prompt_len: int, max_new: int,
 
 
 class Scheduler:
+    #: trace sink (repro.obs) — the engine swaps in its live tracer; the
+    #: class default keeps a standalone Scheduler emit-free at no cost
+    tracer = NULL_TRACER
+
     def __init__(self, slots: int, max_len: int, *,
                  tenants=None, classes=None, policy: str = "priority",
                  aging_steps: int = 8, preempt: bool = True,
@@ -251,6 +256,14 @@ class Scheduler:
         while i < len(self.queue) and self.free:
             t = self.queue[i]
             if can_admit is not None and not can_admit(t):
+                if self.tracer.enabled:
+                    # the layout refused capacity: this ticket waits in rank
+                    # while the scan continues — admissions behind it are
+                    # legal reorderings the replay harness must not call
+                    # FIFO violations
+                    self.tracer.emit("admit_defer", rid=t.rid,
+                                     cause="layout_refusal")
+                    self.tracer.inc("admit_defers")
                 i += 1
                 continue
             self.queue.pop(i)
@@ -306,6 +319,9 @@ class Scheduler:
             v = max(cands, key=lambda t: (t.priority, t.deadline, t.seq))
             victims.append(v)
             taken.add(v.rid)
+            if self.tracer.enabled:
+                self.tracer.emit("preempt_plan", rid=v.rid, slot=v.slot,
+                                 cause="priority", waiter=w.rid)
         return victims
 
     def page_victim(self) -> Ticket | None:

@@ -207,3 +207,35 @@ def build_spec_round(model, axes, k: int, modal_verify: bool):
         return drafts, greedy, n_acc, new_state
 
     return round_fn
+
+
+#: windowed draft/verify agreement below this rate is a rejection storm —
+#: the draft table is too cheap for the current token distribution and the
+#: acceptance controller should be pulling the shift shallower
+REJECT_STORM_RATE = 0.25
+
+
+def trace_round(tracer, *, k: int, n_active: int, agreed: int, emitted: int,
+                dur_ms: float | None = None) -> None:
+    """Emit one speculative round's trace record (repro.obs).
+
+    ``agreed`` is raw draft/verify agreement (what the acceptance controller
+    sees), ``emitted`` the tokens that actually left the engine after budget
+    clamping.  A round whose acceptance rate drops below
+    :data:`REJECT_STORM_RATE` is stamped ``cause="reject_storm"`` so draft
+    collapses are findable in the trace without replaying the counters."""
+    if not tracer.enabled:
+        return
+    drafted = k * n_active
+    rate = agreed / drafted if drafted else None
+    tracer.emit(
+        "spec_round",
+        cause=("reject_storm" if rate is not None and rate < REJECT_STORM_RATE
+               else None),
+        dur_ms=dur_ms, n_active=n_active, drafted=drafted, agreed=agreed,
+        emitted=emitted, accept_rate=rate)
+    tracer.inc("spec_rounds")
+    tracer.inc("spec_drafted", drafted)
+    tracer.inc("spec_agreed", agreed)
+    if rate is not None and rate < REJECT_STORM_RATE:
+        tracer.inc("spec_reject_storms")

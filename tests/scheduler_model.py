@@ -433,3 +433,73 @@ def check_all(sched, log) -> None:
     check_intra_class_fifo(sched, log)
     check_aging_bound(sched, log)
     check_quantum(sched, log)
+
+
+# ---------------------------------------------------------------------------
+# Consumer mode: replay a real engine's trace through the same invariants
+# ---------------------------------------------------------------------------
+
+#: repro.obs event kinds -> drive() log kinds.  Everything else in the
+#: trace (decode_step, mode_switch, cow_fork, ...) is engine detail the
+#: scheduler contract does not speak about and is dropped by the mapping.
+TRACE_KINDS = {
+    "submit": SUBMIT,
+    "admit": ADMIT,
+    "resume": RESUME,
+    "preempt": PREEMPT,
+    "token": TOKEN,
+    "done": FINISH,
+}
+
+
+def log_from_trace(events, *, skip_causes: tuple[str, ...] = ()) -> list:
+    """Project a repro.obs event stream onto drive()'s
+    ``(step, kind, rid, slot)`` log.  ``skip_causes`` drops lifecycle
+    events whose cause is exempt from a specific invariant — e.g. the
+    quantum check runs with ``skip_causes=("page_pressure",)`` because
+    page-pressure eviction deliberately ignores ``min_quantum`` (memory
+    pressure is a correctness condition, not a fairness policy)."""
+    log = []
+    for e in events:
+        kind = TRACE_KINDS.get(e.kind)
+        if kind is None or e.rid is None:
+            continue
+        if e.cause is not None and e.cause in skip_causes:
+            continue
+        log.append((e.step, kind, e.rid,
+                    -1 if e.slot is None else int(e.slot)))
+    return log
+
+
+def check_replay(engine) -> list:
+    """Replay a drained traced engine's event stream through the scheduler
+    invariants — every trace becomes a checkable artifact.
+
+    Checks always: lossless ring (no dropped events), request-span
+    lifecycle order (repro.obs.span_violations), conservation, and the
+    quantum bound over priority preemptions (page-pressure evictions are
+    cause-exempt).  The FIFO and aging checks only run on traces without
+    admission refusals/deferrals: under memory pressure the layout legally
+    reorders admissions (slot order is a preference, not a barrier) and
+    re-ranks waits, which those two checks would misread as violations.
+    Returns the projected log."""
+    from repro.obs import span_violations
+
+    tracer = engine.tracer
+    assert tracer.enabled, "check_replay needs a traced engine"
+    assert tracer.dropped == 0, (
+        f"{tracer.dropped} events dropped — raise TraceConfig.capacity to "
+        f"make the trace replayable")
+    events = list(tracer.events)
+    bad = span_violations(events)
+    assert not bad, f"lifecycle violations: {bad}"
+    sched = engine.scheduler
+    log = log_from_trace(events)
+    check_conservation(sched, log)
+    pressured = any(e.kind in ("admit_defer", "admit_refuse") for e in events)
+    if not pressured:
+        check_intra_class_fifo(sched, log)
+        check_aging_bound(sched, log)
+    check_quantum(sched, log_from_trace(events,
+                                        skip_causes=("page_pressure",)))
+    return log

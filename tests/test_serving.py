@@ -154,3 +154,83 @@ class TestServeEngine:
             ref.append(nxt)
             toks.append(nxt)
         assert out == ref
+
+
+class TestServeMetricsEdges:
+    """ServeMetrics edge cases (obs PR satellites): monotonic clock,
+    percentile corner ranks, empty-tenant and no-round spec summaries."""
+
+    def test_backwards_clock_never_negative_latency(self):
+        # satellite regression: latency/TTFT stamps come from one _mark()
+        # point on a monotonic clock, and even a clock that steps BACKWARDS
+        # (a broken injected clock, a platform perf_counter regression)
+        # must be clamped — a negative latency would poison every
+        # percentile downstream
+        from repro.serve.metrics import ServeMetrics
+
+        ticks = iter([100.0, 90.0, 80.0, 70.0])
+        m = ServeMetrics(1, clock=lambda: next(ticks))
+        m.on_submit(0)
+        m.on_first_token(0)
+        m.on_done(0, step=1)
+        assert m.ttft(0) == 0.0
+        assert m.latency(0) == 0.0
+        s = m.summary()
+        assert s["ttft_mean_s"] >= 0.0 and s["latency_mean_s"] >= 0.0
+
+    def test_percentile_nearest_rank_corners(self):
+        from repro.serve.metrics import percentile
+
+        assert percentile([], 50) is None
+        # single element: every q maps to it
+        assert percentile([3.0], 0) == 3.0
+        assert percentile([3.0], 50) == 3.0
+        assert percentile([3.0], 100) == 3.0
+        vals = [5.0, 1.0, 3.0, 2.0, 4.0]
+        assert percentile(vals, 0) == 1.0  # q=0 -> min, never index -1
+        assert percentile(vals, 100) == 5.0  # q=100 -> max, never OOB
+        assert percentile(vals, 50) == 3.0
+
+    def test_tenant_summary_zero_budget_only_tenant(self):
+        # a tenant whose every request was zero-budget (completed straight
+        # from the queue: no first token, no decode slots) must still get a
+        # coherent row — completed counts, None percentiles, zero share
+        from repro.serve.metrics import ServeMetrics
+
+        m = ServeMetrics(2)
+        m.set_tenant_shares({"z": 1.0, "busy": 1.0})
+        m.on_submit(0, tenant="z", step=0)
+        m.on_done(0, step=1)
+        m.on_submit(1, tenant="busy", step=0)
+        m.on_first_token(1)
+        m.on_token(1)
+        m.on_decode_step(1, tenant_active={"busy": 1})
+        m.on_done(1, step=2)
+        ts = m.tenant_summary()
+        z = ts["z"]
+        assert z["submitted"] == z["completed"] == 1
+        assert z["tokens"] == 0
+        assert z["ttft_p50_s"] is None  # never produced a token
+        assert z["latency_p50_s"] is not None  # but did complete
+        assert z["slot_share"] == 0.0
+        assert ts["busy"]["slot_share"] == 1.0
+
+    def test_spec_counters_without_any_round(self):
+        # speculate= on, but every request completes at its prefill token
+        # (max_new=1) — no speculative round ever drafts; the spec counters
+        # and the describe surface must report the absence, not divide by it
+        from repro.spec import SpecConfig
+
+        cfg, model, params = _tiny()
+        eng = ServeEngine(model, params, batch_slots=2, max_len=16,
+                          speculate=SpecConfig(k=2, draft_shift=1))
+        rng = np.random.default_rng(0)
+        eng.submit(Request(prompt=rng.integers(0, cfg.vocab, 5).astype(np.int32),
+                           max_new=1, rid=0))
+        done = eng.drain()
+        assert len(done[0]) == 1
+        s = eng.metrics.summary()
+        assert s["spec_rounds"] == 0
+        assert s["acceptance_rate"] is None
+        assert s["verify_steps_per_token"] is None
+        assert "0 rounds" in eng.describe_speculation()
