@@ -1,0 +1,50 @@
+"""repro.analysis — static verification of the run-time-precision contracts.
+
+Three passes over the repo, run together by ``python -m repro.analysis``:
+
+* :mod:`repro.analysis.flow` — precision-flow checking over traced jaxprs
+  (FLOW-F64 / FLOW-WIDEN / FLOW-MODE / FLOW-NARROW).
+* :mod:`repro.analysis.dispatch` — dispatch & fusion audit with
+  declarative per-hot-path expectations (DISP-COUNT / DISP-DENSIFY).
+* :mod:`repro.analysis.lint` — trace-hygiene AST linter over ``src/``
+  (TH001–TH005).
+
+The hot paths themselves live in :mod:`repro.analysis.hotpaths`; results
+are :class:`~repro.analysis.report.Violation` records.
+"""
+from repro.analysis.dispatch import (
+    Expect,
+    audit,
+    audit_jaxpr,
+    audit_stats,
+    dispatch_stats,
+)
+from repro.analysis.flow import MANTISSA_BITS, analyze_flow, flow_violations
+from repro.analysis.lint import (
+    ALLOWLIST,
+    RULES,
+    lint_file,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.report import Violation, format_report, rule_ids, write_json
+
+__all__ = [
+    "ALLOWLIST",
+    "Expect",
+    "MANTISSA_BITS",
+    "RULES",
+    "Violation",
+    "analyze_flow",
+    "audit",
+    "audit_jaxpr",
+    "audit_stats",
+    "dispatch_stats",
+    "flow_violations",
+    "format_report",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "rule_ids",
+    "write_json",
+]

@@ -1,0 +1,59 @@
+"""CLI gate: ``python -m repro.analysis`` runs all three passes and exits
+nonzero on any violation.
+
+* trace-hygiene linter over ``--src`` (default: the repo's ``src/`` tree,
+  located relative to this package so the gate works from any cwd);
+* precision-flow + dispatch audits over every registered hot path
+  (``--quick`` restricts to the kernel/train subset — no engine builds);
+* ``--report out.json`` writes the machine-readable violation report
+  (the CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.hotpaths import all_paths, check
+from repro.analysis.lint import lint_paths
+from repro.analysis.report import format_report, write_json
+
+
+def _default_src() -> str:
+    # src/repro/analysis/__main__.py -> src/
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--src", default=None,
+                    help="source tree to lint (default: the repo src/)")
+    ap.add_argument("--quick", action="store_true",
+                    help="kernel/train hot paths only (skip engine builds)")
+    ap.add_argument("--skip-lint", action="store_true")
+    ap.add_argument("--skip-paths", action="store_true")
+    ap.add_argument("--report", default=None, metavar="OUT.json",
+                    help="write the JSON violation report (CI artifact)")
+    args = ap.parse_args(argv)
+
+    violations, checked = [], []
+    if not args.skip_lint:
+        src = args.src or _default_src()
+        lint_v, files = lint_paths(src)
+        violations += lint_v
+        checked += [f"lint:{os.path.relpath(p, src)}" for p in files]
+    if not args.skip_paths:
+        path_v, names = check(all_paths(quick=args.quick))
+        violations += path_v
+        checked += names
+
+    print(format_report(violations, checked))
+    if args.report:
+        write_json(args.report, violations, checked)
+        print(f"report -> {args.report}")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,179 @@
+"""Dispatch & fusion auditor: count precision-dispatch structure in jaxprs.
+
+This is the single home of the jaxpr walkers that used to live in
+``kernels/tile_matmul/tile_policy.py`` (which still re-exports them): the
+tile tests' two-counter ``dispatch_stats`` plus the generalized
+``audit_stats`` — per-path counts of ``pallas_call``, ``lax.switch``/
+``cond``, scan/while, scatter/gather, dtype converts, and the largest
+gather output — checked against declarative :class:`Expect` records for
+every hot path (``repro.analysis.hotpaths``).
+
+Two rules:
+
+``DISP-COUNT``
+    A declarative count expectation failed — e.g. the runtime-bound tile
+    pmm must be exactly 1 fused ``pallas_call`` with 0 switches (the
+    paper's one-multiplier/many-modes contract), the static decode step
+    must contain no mode switches at all.
+
+``DISP-DENSIFY``
+    A gather-class equation materialized more bytes than the declared
+    per-path bound — the "paged gather rows never densify the pool"
+    contract: page-table reads may gather each row's own pages (≤ B × cap
+    rows), never the whole pool per row.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.analysis.report import Violation
+
+#: equations that read memory by index — the densify rule measures these
+GATHER_PRIMS = ("gather", "dynamic_slice")
+#: equations that write memory by index
+SCATTER_PRIMS = ("scatter", "scatter-add", "scatter-mul", "scatter-min",
+                 "scatter-max", "dynamic_update_slice")
+
+
+def dispatch_stats(fn, *args, **kwargs) -> dict[str, int]:
+    """Trace ``fn(*args, **kwargs)`` and count precision-dispatch structure:
+    ``switches`` (lax.switch/cond equations — the old N-branch runtime path)
+    and ``pallas_calls`` (fused kernel dispatches).  Descends through nested
+    jaxprs but NOT into kernel bodies, so the predicated passes inside the
+    tile kernel do not count as switches.  Used by tests and tile_sweep to
+    assert the tile path collapses N branches into one dispatch.
+    """
+    full = audit_stats(fn, *args, **kwargs)
+    return {"switches": full["switches"], "pallas_calls": full["pallas_calls"]}
+
+
+def audit_stats(fn, *args, **kwargs) -> dict[str, int]:
+    """Full dispatch audit of ``fn(*args, **kwargs)``'s jaxpr.
+
+    Returns every counter the per-path expectations can bind:
+    ``switches`` / ``pallas_calls`` (as ``dispatch_stats``), ``scans`` /
+    ``whiles`` (sequential control), ``gathers`` / ``scatters`` (indexed
+    memory traffic), ``converts`` (``convert_element_type`` equations),
+    ``dots`` (``dot_general`` — the MXU dispatch count of non-pallas
+    paths), ``eqns`` (total equations, nested included), and
+    ``max_gather_bytes`` (largest gather-class output — the densify
+    measure).  Kernel bodies are not descended into, matching
+    ``dispatch_stats``.
+    """
+    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    stats = {
+        "switches": 0, "pallas_calls": 0, "scans": 0, "whiles": 0,
+        "gathers": 0, "scatters": 0, "converts": 0, "dots": 0, "eqns": 0,
+        "max_gather_bytes": 0,
+    }
+    _walk(jaxpr.jaxpr, stats)
+    return stats
+
+
+def audit_jaxpr(jaxpr) -> dict[str, int]:
+    """``audit_stats`` over an already-traced (unclosed) jaxpr."""
+    stats = {
+        "switches": 0, "pallas_calls": 0, "scans": 0, "whiles": 0,
+        "gathers": 0, "scatters": 0, "converts": 0, "dots": 0, "eqns": 0,
+        "max_gather_bytes": 0,
+    }
+    _walk(jaxpr, stats)
+    return stats
+
+
+def _subjaxprs(params):
+    """Nested jaxprs in an equation's params, version-portable (duck-typed
+    on .eqns / .jaxpr instead of jax.core types, which moved across jax
+    releases)."""
+    for val in params.values():
+        for item in val if isinstance(val, (tuple, list)) else (val,):
+            if hasattr(item, "eqns"):  # Jaxpr
+                yield item
+            elif hasattr(item, "jaxpr") and hasattr(getattr(item, "jaxpr"), "eqns"):
+                yield item.jaxpr  # ClosedJaxpr
+
+
+def _out_bytes(eqn) -> int:
+    total = 0
+    for var in eqn.outvars:
+        aval = getattr(var, "aval", None)
+        if aval is not None and hasattr(aval, "shape") and hasattr(aval, "dtype"):
+            total += int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize
+    return total
+
+
+def _walk(jaxpr, stats) -> None:
+    for eqn in jaxpr.eqns:
+        stats["eqns"] += 1
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            stats["pallas_calls"] += 1
+            continue  # kernel-internal predication is not a dispatch
+        if name == "cond":
+            stats["switches"] += 1
+        elif name == "scan":
+            stats["scans"] += 1
+        elif name == "while":
+            stats["whiles"] += 1
+        elif name in GATHER_PRIMS:
+            stats["gathers"] += 1
+            stats["max_gather_bytes"] = max(
+                stats["max_gather_bytes"], _out_bytes(eqn))
+        elif name in SCATTER_PRIMS:
+            stats["scatters"] += 1
+        elif name == "convert_element_type":
+            stats["converts"] += 1
+        elif name == "dot_general":
+            stats["dots"] += 1
+        for sub in _subjaxprs(eqn.params):
+            _walk(sub, stats)
+
+
+@dataclasses.dataclass(frozen=True)
+class Expect:
+    """Declarative dispatch expectation for one audited hot path.
+
+    ``exact`` pins a counter to a value, ``at_most``/``at_least`` bound it;
+    ``densify_bytes`` caps ``max_gather_bytes`` (the pool-densify rule) —
+    set it to the path's legitimate per-step gather ceiling, e.g.
+    B × cap × heads × head_dim × itemsize for a paged decode step.
+    """
+
+    exact: dict[str, int] = dataclasses.field(default_factory=dict)
+    at_most: dict[str, int] = dataclasses.field(default_factory=dict)
+    at_least: dict[str, int] = dataclasses.field(default_factory=dict)
+    densify_bytes: int | None = None
+
+    def check(self, stats: dict[str, int], where: str) -> list[Violation]:
+        out: list[Violation] = []
+        for key, want in self.exact.items():
+            if stats.get(key) != want:
+                out.append(Violation(
+                    "DISP-COUNT", where,
+                    f"expected {key} == {want}, traced {stats.get(key)}"))
+        for key, cap in self.at_most.items():
+            if stats.get(key, 0) > cap:
+                out.append(Violation(
+                    "DISP-COUNT", where,
+                    f"expected {key} <= {cap}, traced {stats.get(key)}"))
+        for key, floor in self.at_least.items():
+            if stats.get(key, 0) < floor:
+                out.append(Violation(
+                    "DISP-COUNT", where,
+                    f"expected {key} >= {floor}, traced {stats.get(key)}"))
+        if (self.densify_bytes is not None
+                and stats.get("max_gather_bytes", 0) > self.densify_bytes):
+            out.append(Violation(
+                "DISP-DENSIFY", where,
+                f"a gather materialized {stats['max_gather_bytes']} bytes "
+                f"(> {self.densify_bytes}): rows must gather their own "
+                "pages, never densify the pool"))
+        return out
+
+
+def audit(fn, args, expect: Expect, where: str, **kwargs) -> list[Violation]:
+    """Trace ``fn(*args, **kwargs)`` and check ``expect`` against it."""
+    return expect.check(audit_stats(fn, *args, **kwargs), where)

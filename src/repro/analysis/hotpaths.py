@@ -1,0 +1,252 @@
+"""Hot-path registry: every compiled path the static analyses audit.
+
+Each :class:`HotPath` pins a traced callable, its example arguments, a
+declarative dispatch :class:`~repro.analysis.dispatch.Expect`, and the
+flow-rule configuration (mode args, f64 tracing).  The registry is the
+contract surface: counts are pinned against the registry's own smoke
+configs, so a structural change to a hot path (an extra switch, a
+densified gather, a dropped fusion) fails the gate until the contract is
+consciously updated here.
+
+Coverage:
+
+* kernel paths — runtime-bound pmm on both impls (xla = 1 switch, tile =
+  1 fused ``pallas_call`` / 0 switches), budget-driven ``tile_matmul_auto``,
+  and the ``quantize_mantissa`` kernel; traced under x64 so FLOW-F64 is
+  live.
+* the train step (f64-clean even under x64; zero switches).
+* the live serve engine across dense / ssm / hybrid architectures ×
+  {dense, paged} cache × {plain decode, speculative round}, plus the
+  modal adaptive step and the modal-verify speculative round.  Engine
+  state is built under default x64-off config, so these trace with
+  ``x64=False`` — the f64 rule is carried by the kernel/train paths.
+
+``mode_args`` marks which positional arguments are mode-select scalars
+(or per-site scalar dicts) for the FLOW-MODE zero-recompile check.  The
+speculative round with ``modal_verify=False`` deliberately ignores its
+verify table (verification runs the static baseline step for bit
+identity), so only the draft table is declared; the ``modal-verify``
+cell declares both.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+from repro.analysis.dispatch import Expect, audit_stats
+from repro.analysis.flow import DEFAULT_WIDEN_ALLOW, analyze_flow
+from repro.analysis.report import Violation
+
+#: dense-attention, state-space, and hybrid (local-window) families
+ARCHS = ("qwen1.5-0.5b", "mamba2-2.7b", "recurrentgemma-9b")
+
+#: per-arch cap on the largest legitimate gather in one decode step /
+#: spec round (bytes) — the densify guards.  A per-row pool densify is
+#: ≥ 2× these (B × pool rows vs B × cap rows), so exact pins hold margin.
+_DECODE_GATHER_CAP = {"qwen1.5-0.5b": 8192, "mamba2-2.7b": 4096,
+                      "recurrentgemma-9b": 4096}
+_SPEC_GATHER_CAP = {
+    ("qwen1.5-0.5b", False): 8192, ("qwen1.5-0.5b", True): 16384,
+    ("mamba2-2.7b", False): 65536, ("mamba2-2.7b", True): 65536,
+    ("recurrentgemma-9b", False): 4096, ("recurrentgemma-9b", True): 4096,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HotPath:
+    name: str
+    fn: Callable
+    args: tuple
+    expect: Expect
+    mode_args: tuple[int, ...] = ()
+    x64: bool = True
+    oracles: tuple[str, ...] = ()
+    widen_allow: tuple = DEFAULT_WIDEN_ALLOW
+
+
+def check(paths) -> tuple[list[Violation], list[str]]:
+    """Run the dispatch audit + all flow rules over each path."""
+    violations: list[Violation] = []
+    checked: list[str] = []
+    for hp in paths:
+        checked.append(hp.name)
+        stats = audit_stats(hp.fn, *hp.args)
+        violations.extend(hp.expect.check(stats, hp.name))
+        violations.extend(analyze_flow(
+            hp.fn, *hp.args, path=hp.name, mode_args=hp.mode_args,
+            widen_allow=hp.widen_allow, oracles=hp.oracles, x64=hp.x64))
+    return violations, checked
+
+
+def all_paths(quick: bool = False) -> list[HotPath]:
+    """The full registry (or the fast kernel/train subset for tests)."""
+    paths = kernel_paths() + train_paths()
+    if not quick:
+        paths += engine_paths()
+    return paths
+
+
+# --------------------------------------------------------------------------
+# kernel + train paths (analyzer-built args: traced under x64)
+
+def kernel_paths() -> list[HotPath]:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.rmpm import mp_matmul_runtime
+    from repro.kernels.quantize_mantissa.ops import quantize_mantissa_op
+    from repro.kernels.tile_matmul.ops import tile_matmul_auto
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((64, 96)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((96, 48)).astype(np.float32))
+    blk = (32, 32, 32)
+
+    def pmm(impl):
+        def fn(a_, b_, mode):
+            return mp_matmul_runtime(a_, b_, mode, impl=impl, block=blk,
+                                     allow_auto=False)
+        return fn
+
+    return [
+        # the old N-branch runtime path: exactly one lax.switch, no kernels
+        HotPath("pmm-runtime-xla", pmm("xla"), (a, b, jnp.int32(2)),
+                Expect(exact={"switches": 1, "pallas_calls": 0},
+                       at_least={"dots": 1}),
+                mode_args=(2,)),
+        # the paper's contract: N modes collapse into ONE fused dispatch
+        HotPath("pmm-runtime-tile", pmm("tile"), (a, b, jnp.int32(2)),
+                Expect(exact={"switches": 0, "pallas_calls": 1, "dots": 0}),
+                mode_args=(2,)),
+        HotPath("tile-matmul-auto",
+                lambda a_, b_: tile_matmul_auto(a_, b_, 2.0**-10,
+                                                bm=32, bn=32, bk=32),
+                (a, b),
+                Expect(exact={"switches": 0, "pallas_calls": 1})),
+        HotPath("quantize-mantissa",
+                lambda x: quantize_mantissa_op(x, keep=8), (a,),
+                Expect(exact={"switches": 0, "pallas_calls": 1})),
+    ]
+
+
+def train_paths() -> list[HotPath]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+    _cfg, model, _params = _tiny("qwen1.5-0.5b")
+    tcfg = TrainConfig()
+    state = init_train_state(model, jax.random.key(0), tcfg)
+    step = make_train_step(model, tcfg)
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    return [
+        HotPath("train-step", step, (state, batch),
+                Expect(exact={"switches": 0, "pallas_calls": 0, "whiles": 0},
+                       at_least={"dots": 1})),
+    ]
+
+
+# --------------------------------------------------------------------------
+# live-engine matrix
+
+@functools.lru_cache(maxsize=None)
+def _tiny(arch: str):
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.core.policy import NATIVE_F32
+    from repro.models import build_model
+
+    cfg = get_smoke_config(arch).with_policy(NATIVE_F32)
+    cfg = dc.replace(cfg, n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _engine(arch: str, *, paged: bool = False, spec=None, slo=None,
+            accuracy=None):
+    from repro.serve import CacheConfig, ServeConfig, ServeEngine
+    from repro.serve.config import AdaptConfig
+
+    _cfg, model, params = _tiny(arch)
+    cache = (CacheConfig(layout="paged", page_size=4) if paged
+             else CacheConfig())
+    cfg = ServeConfig(
+        batch_slots=2, max_len=32, accuracy=accuracy, cache=cache,
+        spec=spec, adapt=AdaptConfig(slo=slo))
+    return ServeEngine(model, params, config=cfg), params
+
+
+def engine_paths(archs: tuple[str, ...] = ARCHS) -> list[HotPath]:
+    import jax.numpy as jnp
+
+    from repro.adapt import SLO
+    from repro.spec import SpecConfig
+    from repro.spec.rollout import build_spec_round
+
+    tokens = jnp.zeros((2, 1), jnp.int32)
+    active = jnp.ones((2,), bool)
+    paths: list[HotPath] = []
+
+    # static decode step: zero switches, no host loops, bounded gathers
+    for arch in archs:
+        for paged in (False, True):
+            eng, params = _engine(arch, paged=paged)
+            paths.append(HotPath(
+                f"decode/{arch}/{'paged' if paged else 'dense'}",
+                eng._masked_step, (params, tokens, eng.state, active),
+                Expect(exact={"switches": 0, "pallas_calls": 0, "whiles": 0},
+                       at_most={"scans": 4},
+                       densify_bytes=_DECODE_GATHER_CAP[arch]),
+                x64=False))
+
+    # speculative round: draft table runtime-bound (≥1 switch), one
+    # compiled round (k draft scans + verify + rollback = 6 scans)
+    for arch in archs:
+        for paged in (False, True):
+            eng, params = _engine(arch, paged=paged, spec=SpecConfig(k=2))
+            round_fn = build_spec_round(eng.model_decode, eng._axes, 2,
+                                        modal_verify=False)
+            args = (params, tokens, eng.state, active,
+                    eng._spec_table.scalars_shifted(-eng.draft_shift),
+                    eng._spec_table.scalars())
+            paths.append(HotPath(
+                f"spec/{arch}/{'paged' if paged else 'dense'}",
+                round_fn, args,
+                Expect(exact={"pallas_calls": 0, "whiles": 0, "scans": 6},
+                       at_least={"switches": 1},
+                       densify_bytes=_SPEC_GATHER_CAP[arch, paged]),
+                mode_args=(4,), x64=False))
+
+    # modal adaptive step: the ModeTable scalars must stay traced args
+    eng, params = _engine("qwen1.5-0.5b", slo=SLO(max_err=0.5),
+                          accuracy=2.0**-5)
+    paths.append(HotPath(
+        "decode-modal/qwen1.5-0.5b",
+        eng._masked_step_modal,
+        (params, tokens, eng.state, active, eng.mode_table.scalars()),
+        Expect(exact={"pallas_calls": 0, "whiles": 0},
+               at_least={"switches": 1}),
+        mode_args=(4,), x64=False))
+
+    # modal-verify speculative round: BOTH tables runtime-bound
+    eng, params = _engine("qwen1.5-0.5b", slo=SLO(max_err=0.5),
+                          accuracy=2.0**-5, spec=SpecConfig(k=2))
+    round_fn = build_spec_round(eng.model_decode, eng._axes, 2,
+                                modal_verify=True)
+    paths.append(HotPath(
+        "spec-modal/qwen1.5-0.5b",
+        round_fn,
+        (params, tokens, eng.state, active,
+         eng._spec_table.scalars_shifted(-eng.draft_shift),
+         eng._spec_table.scalars()),
+        Expect(exact={"pallas_calls": 0, "whiles": 0, "scans": 6},
+               at_least={"switches": 2}),
+        mode_args=(4, 5), x64=False))
+    return paths

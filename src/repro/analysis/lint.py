@@ -1,0 +1,319 @@
+"""Trace-hygiene linter: AST rules for jax code in this repo.
+
+Static source checks that the jaxpr-level passes cannot express — they
+look at what the *Python* does around tracing, not what the trace
+contains.  Each rule has a stable ID, a docstring in :data:`RULES`, and a
+per-file allowlist in :data:`ALLOWLIST` (suffix-matched paths, so moves
+within ``src/`` keep working).
+
+``TH001`` host-branch-on-traced
+    ``if`` / ``while`` / conditional expressions inside a jit body whose
+    test reads a traced parameter's *value*.  Host branching on traced
+    values either fails at trace time or — worse — constant-folds per
+    value and recompiles.  Metadata access (``.shape``/``.ndim``/
+    ``.dtype``/``.size``), ``is None`` checks, ``isinstance``/``len``,
+    and static argnames are all fine and excluded.
+
+``TH002`` wallclock-timing
+    ``time.time()`` anywhere in ``src/``.  Duration spans must use
+    ``time.perf_counter()`` (monotonic — wall clock can step backwards
+    under NTP adjustment); genuine wall-clock *metadata stamps* are
+    allowlisted per file.
+
+``TH003`` host-call-in-jit
+    ``np.*`` / ``numpy.*`` calls or ``float()``/``int()``/``bool()``
+    coercions applied to traced parameters inside a jit body.  These
+    force a host transfer (ConcretizationTypeError at best, silent
+    constant-folding at worst).  Host math on static metadata
+    (``np.prod(x.shape)``) is fine.
+
+``TH004`` interpret-in-jit
+    ``default_interpret()`` / ``resolve_interpret()`` called inside a jit
+    body.  Backend probing must happen in the non-jit shell: inside jit
+    it is resolved once at trace time for whatever backend traced first
+    and baked into the cache.
+
+``TH005`` mutable-default
+    Mutable literals (``[]``/``{}``/``set()``/``list()``/``dict()``) as
+    function parameter defaults or as bare dataclass field defaults.
+    Config dataclasses are compared and hashed as cache keys here;
+    mutable defaults alias across instances.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.report import Violation
+
+#: rule catalogue: ID -> one-line summary (full semantics in module docstring)
+RULES = {
+    "TH001": "host Python branch on a traced value inside a jit body",
+    "TH002": "time.time() used where a monotonic clock is required",
+    "TH003": "numpy/host call on a traced value inside a jit body",
+    "TH004": "interpret= resolved inside a jit boundary",
+    "TH005": "mutable default argument / dataclass field default",
+}
+
+#: per-rule path-suffix allowlist (the only sanctioned escapes)
+ALLOWLIST: dict[str, tuple[str, ...]] = {
+    # manifest stamps are *metadata* — wall-clock is the point
+    "TH002": ("checkpoint/manager.py",),
+}
+
+#: attribute reads that are static metadata, not traced values
+METADATA_ATTRS = frozenset(
+    {"shape", "ndim", "dtype", "size", "itemsize", "sharding", "aval",
+     "weak_type"})
+
+#: host calls that never concretize (operate on metadata / types)
+_SAFE_CALLS = frozenset(
+    {"isinstance", "len", "getattr", "hasattr", "callable", "type", "repr",
+     "str", "id"})
+
+_COERCIONS = frozenset({"float", "int", "bool", "complex"})
+
+
+def allowed(rule: str, path: str) -> bool:
+    norm = path.replace(os.sep, "/")
+    return any(norm.endswith(sfx) for sfx in ALLOWLIST.get(rule, ()))
+
+
+def lint_source(text: str, path: str) -> list[Violation]:
+    """Run every rule over one file's source."""
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as exc:
+        return [Violation("TH000", f"{path}:{exc.lineno}",
+                          f"file does not parse: {exc.msg}")]
+    out: list[Violation] = []
+    jitted = _jitted_functions(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            statics = jitted.get(node.name)
+            if statics is not None or _jit_decorated(node)[0]:
+                if statics is None:
+                    statics = _jit_decorated(node)[1]
+                out.extend(_lint_jit_body(node, statics, path))
+    out.extend(_lint_wallclock(tree, path))
+    out.extend(_lint_mutable_defaults(tree, path))
+    return [v for v in out if not allowed(v.rule, path)]
+
+
+def lint_file(path: str) -> list[Violation]:
+    with open(path) as f:
+        return lint_source(f.read(), path)
+
+
+def lint_paths(root: str) -> tuple[list[Violation], list[str]]:
+    """Lint every ``.py`` under ``root``; returns (violations, files)."""
+    files: list[str] = []
+    out: list[Violation] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", ".git"))
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                p = os.path.join(dirpath, fn)
+                files.append(p)
+                out.extend(lint_file(p))
+    return out, files
+
+
+# --------------------------------------------------------------------------
+# jit-body discovery
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """Matches ``jax.jit`` or bare ``jit``."""
+    if isinstance(node, ast.Attribute):
+        return (node.attr == "jit" and isinstance(node.value, ast.Name)
+                and node.value.id == "jax")
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _static_names(call: ast.Call) -> frozenset[str]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums") and isinstance(
+                kw.value, (ast.Tuple, ast.List, ast.Constant)):
+            elts = (kw.value.elts
+                    if isinstance(kw.value, (ast.Tuple, ast.List))
+                    else [kw.value])
+            return frozenset(
+                e.value for e in elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str))
+    return frozenset()
+
+
+def _jit_decorated(fn: ast.FunctionDef) -> tuple[bool, frozenset[str]]:
+    """(is-jitted, static argnames) from this def's decorators."""
+    for dec in fn.decorator_list:
+        if _is_jax_jit(dec):
+            return True, frozenset()
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func):          # @jax.jit(donate_argnums=...)
+                return True, _static_names(dec)
+            func = dec.func                    # @partial(jax.jit, ...)
+            if (isinstance(func, ast.Name) and func.id == "partial"
+                    or isinstance(func, ast.Attribute)
+                    and func.attr == "partial"):
+                if dec.args and _is_jax_jit(dec.args[0]):
+                    return True, _static_names(dec)
+    return False, frozenset()
+
+
+def _jitted_functions(tree: ast.Module) -> dict[str, frozenset[str]]:
+    """Function names wrapped by ``jax.jit(...)`` anywhere in the module —
+    covers ``step = jax.jit(fn)`` and ``self._step = jax.jit(self._fn)``
+    (the engine idiom) — mapped to their static argnames."""
+    jitted: dict[str, frozenset[str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jax_jit(node.func) and node.args:
+            target = node.args[0]
+            name = None
+            if isinstance(target, ast.Name):
+                name = target.id
+            elif isinstance(target, ast.Attribute):  # self._masked_step
+                name = target.attr
+            if name is not None:
+                jitted[name] = _static_names(node)
+    return jitted
+
+
+# --------------------------------------------------------------------------
+# TH001 / TH003 / TH004 — rules scoped to a jit body
+
+def _traced_params(fn: ast.FunctionDef, statics: frozenset[str]) -> frozenset[str]:
+    names = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                             + fn.args.kwonlyargs)]
+    return frozenset(n for n in names if n not in statics and n != "self")
+
+
+def _reads_traced(node: ast.AST, traced: frozenset[str]) -> bool:
+    """Does evaluating ``node`` read a traced param's *value* (not just
+    its static metadata)?"""
+    if isinstance(node, ast.Name):
+        return node.id in traced
+    if isinstance(node, ast.Attribute):
+        if node.attr in METADATA_ATTRS:
+            return False
+        return _reads_traced(node.value, traced)
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Attribute):
+        if node.value.attr in METADATA_ATTRS:   # x.shape[0]
+            return False
+    if isinstance(node, ast.Call):
+        fname = node.func
+        if isinstance(fname, ast.Name) and fname.id in _SAFE_CALLS:
+            return False
+        return (_reads_traced(fname, traced)     # x.sum() — traced receiver
+                or any(_reads_traced(c, traced)
+                       for c in list(node.args)
+                       + [kw.value for kw in node.keywords]))
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return False                        # x is None — identity only
+    return any(_reads_traced(c, traced) for c in ast.iter_child_nodes(node))
+
+
+def _np_rooted(func: ast.AST) -> bool:
+    node = func
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id in ("np", "numpy")
+
+
+def _lint_jit_body(fn: ast.FunctionDef, statics: frozenset[str],
+                   path: str) -> list[Violation]:
+    traced = _traced_params(fn, statics)
+    out: list[Violation] = []
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.IfExp, ast.While)):
+            if _reads_traced(node.test, traced):
+                out.append(Violation(
+                    "TH001", f"{path}:{node.lineno}",
+                    f"jit body '{fn.name}' branches in host Python on a "
+                    "traced value — use lax.cond/select or hoist to the "
+                    "shell"))
+        elif isinstance(node, ast.Call):
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            on_traced = any(_reads_traced(a, traced) for a in args)
+            if _np_rooted(node.func) and on_traced:
+                out.append(Violation(
+                    "TH003", f"{path}:{node.lineno}",
+                    f"jit body '{fn.name}' calls numpy on a traced value "
+                    "— use jnp (host numpy concretizes)"))
+            elif (isinstance(node.func, ast.Name)
+                    and node.func.id in _COERCIONS and on_traced):
+                out.append(Violation(
+                    "TH003", f"{path}:{node.lineno}",
+                    f"jit body '{fn.name}' coerces a traced value with "
+                    f"{node.func.id}() — host coercion concretizes"))
+            fname = node.func
+            called = (fname.id if isinstance(fname, ast.Name)
+                      else fname.attr if isinstance(fname, ast.Attribute)
+                      else "")
+            if called in ("default_interpret", "resolve_interpret"):
+                out.append(Violation(
+                    "TH004", f"{path}:{node.lineno}",
+                    f"jit body '{fn.name}' resolves interpret= inside the "
+                    "jit boundary — the first-traced backend gets baked "
+                    "in; resolve in the non-jit shell"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# TH002 / TH005 — module-wide rules
+
+def _lint_wallclock(tree: ast.Module, path: str) -> list[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "time"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "time"):
+            out.append(Violation(
+                "TH002", f"{path}:{node.lineno}",
+                "time.time() — use time.perf_counter() for spans "
+                "(wall clock can step backwards); allowlist genuine "
+                "metadata stamps"))
+    return out
+
+
+def _mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("list", "dict", "set") and not node.args
+            and not node.keywords)
+
+
+def _lint_mutable_defaults(tree: ast.Module, path: str) -> list[Violation]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for default in node.args.defaults + [
+                    d for d in node.args.kw_defaults if d is not None]:
+                if _mutable_default(default):
+                    out.append(Violation(
+                        "TH005", f"{path}:{default.lineno}",
+                        f"mutable default argument in '{node.name}' — "
+                        "use None or dataclasses.field(default_factory=...)"))
+        elif isinstance(node, ast.ClassDef) and _is_dataclass(node):
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign) and stmt.value is not None
+                        and _mutable_default(stmt.value)):
+                    out.append(Violation(
+                        "TH005", f"{path}:{stmt.lineno}",
+                        f"mutable field default on dataclass "
+                        f"'{node.name}' — use field(default_factory=...)"))
+    return out
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = (target.id if isinstance(target, ast.Name)
+                else target.attr if isinstance(target, ast.Attribute) else "")
+        if name == "dataclass":
+            return True
+    return False

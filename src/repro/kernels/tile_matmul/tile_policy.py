@@ -136,39 +136,11 @@ def _grid_for(shape_a, shape_b, bm, bn, bk) -> tuple[int, int, int]:
     return grid
 
 
-def dispatch_stats(fn, *args, **kwargs) -> dict[str, int]:
-    """Trace ``fn(*args, **kwargs)`` and count precision-dispatch structure:
-    ``switches`` (lax.switch/cond equations — the old N-branch runtime path)
-    and ``pallas_calls`` (fused kernel dispatches).  Descends through nested
-    jaxprs but NOT into kernel bodies, so the predicated passes inside the
-    tile kernel do not count as switches.  Used by tests and tile_sweep to
-    assert the tile path collapses N branches into one dispatch.
-    """
-    jaxpr = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
-    stats = {"switches": 0, "pallas_calls": 0}
-    _walk(jaxpr.jaxpr, stats)
-    return stats
-
-
-def _subjaxprs(params):
-    """Nested jaxprs in an equation's params, version-portable (duck-typed
-    on .eqns / .jaxpr instead of jax.core types, which moved across jax
-    releases)."""
-    for val in params.values():
-        for item in val if isinstance(val, (tuple, list)) else (val,):
-            if hasattr(item, "eqns"):  # Jaxpr
-                yield item
-            elif hasattr(item, "jaxpr") and hasattr(getattr(item, "jaxpr"), "eqns"):
-                yield item.jaxpr  # ClosedJaxpr
-
-
-def _walk(jaxpr, stats) -> None:
-    for eqn in jaxpr.eqns:
-        name = eqn.primitive.name
-        if name == "pallas_call":
-            stats["pallas_calls"] += 1
-            continue  # kernel-internal predication is not a dispatch
-        if name == "cond":
-            stats["switches"] += 1
-        for sub in _subjaxprs(eqn.params):
-            _walk(sub, stats)
+# The jaxpr walkers grew into a full static-analysis pass and moved to
+# repro.analysis.dispatch (single implementation, version-portable
+# duck-typing preserved); re-exported here for the existing call sites.
+from repro.analysis.dispatch import (  # noqa: E402,F401
+    _subjaxprs,
+    _walk,
+    dispatch_stats,
+)

@@ -65,7 +65,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, policy: str = "paper_b
         return record
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
-        t0 = time.time()
+        t0 = time.perf_counter()
         cell = build_cell(cfg, shape, mesh, grad_compression=grad_compression)
         with jax.set_mesh(mesh):
             lowered = jax.jit(
@@ -74,10 +74,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, policy: str = "paper_b
                 out_shardings=cell.get("out_shardings"),
                 donate_argnums=cell["donate"],
             ).lower(*cell["args"])
-            t_lower = time.time() - t0
-            t0 = time.time()
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
             compiled = lowered.compile()
-            t_compile = time.time() - t0
+            t_compile = time.perf_counter() - t0
         mem = compiled.memory_analysis()
         print(compiled.memory_analysis())  # proves it fits
         ca = compiled.cost_analysis()
@@ -152,14 +152,14 @@ def main() -> None:
     n_fail = 0
     for arch, shape in cells:
         for mp in meshes:
-            t0 = time.time()
+            t0 = time.perf_counter()
             rec = run_cell(arch, shape, mp, args.policy, args.out,
                            args.grad_compression, args.kv_int8)
             status = rec["status"]
             n_fail += status == "fail"
             dom = rec.get("roofline", {}).get("dominant", "-")
             print(
-                f"[{status:4s}] {rec['cell']:70s} {time.time()-t0:6.1f}s dominant={dom}",
+                f"[{status:4s}] {rec['cell']:70s} {time.perf_counter()-t0:6.1f}s dominant={dom}",
                 flush=True,
             )
             if status == "fail":

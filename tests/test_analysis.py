@@ -1,0 +1,353 @@
+"""repro.analysis: each rule proven on a known-good and a known-bad fixture
+(the bad fixture must fire exactly its own rule ID and nothing else), the
+tile_policy re-export compatibility contract, and the CLI gate.
+"""
+import json
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (
+    Expect,
+    Violation,
+    analyze_flow,
+    audit,
+    audit_stats,
+    dispatch_stats,
+    format_report,
+    lint_source,
+    rule_ids,
+    write_json,
+)
+from repro.analysis.__main__ import main as analysis_main
+
+
+@pytest.fixture(scope="module")
+def mats():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((32, 48)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((48, 16)).astype(np.float32))
+    return a, b
+
+
+# --------------------------------------------------------------------------
+# precision-flow rules
+
+class TestFlow:
+    def test_f64_bad(self, mats):
+        a, _ = mats
+        # allowlist the widen so ONLY the f64 rule can fire
+        v = analyze_flow(lambda x: x.astype(jnp.float64) * 2, a, path="p",
+                         widen_allow=(("float32", "float64"),))
+        assert rule_ids(v) == {"FLOW-F64"}
+
+    def test_f64_good_under_x64(self, mats):
+        a, b = mats
+        # f32 math stays f32 even traced under enable_x64
+        assert analyze_flow(lambda x, y: x @ y, a, b, path="p") == []
+
+    def test_widen_bad(self, mats):
+        a, _ = mats
+        h = a.astype(jnp.float16)
+        v = analyze_flow(lambda x: x.astype(jnp.float32) + 1, h, path="p")
+        assert rule_ids(v) == {"FLOW-WIDEN"}
+
+    def test_widen_good_limb_accumulation(self, mats):
+        a, _ = mats
+        h = a.astype(jnp.bfloat16)
+        # bf16 -> f32 is the allowlisted accumulation edge
+        assert analyze_flow(lambda x: x.astype(jnp.float32) + 1, h,
+                            path="p") == []
+
+    def test_mode_bad_constant_folded(self, mats):
+        a, _ = mats
+        # the "mode" arg never reaches an equation: Python folded it
+        v = analyze_flow(lambda x, m: x * 2.0, a, jnp.int32(1), path="p",
+                         mode_args=(1,))
+        assert rule_ids(v) == {"FLOW-MODE"}
+
+    def test_mode_bad_dtype(self, mats):
+        a, _ = mats
+        v = analyze_flow(lambda x, m: x * m, a, jnp.float32(1.0), path="p",
+                         mode_args=(1,))
+        assert rule_ids(v) == {"FLOW-MODE"}
+
+    def test_mode_good_traced_consumed(self, mats):
+        a, _ = mats
+        v = analyze_flow(lambda x, m: x * m.astype(jnp.float32), a,
+                         jnp.int32(2), path="p", mode_args=(1,))
+        assert v == []
+
+    def test_mode_good_dict_with_inert_sites(self, mats):
+        a, _ = mats
+        # a ModeTable-style dict where only one site is consumed: fine —
+        # unused leaves are inert traced args, not folded modes
+        modes = {"used": jnp.int32(1), "inert": jnp.int32(2)}
+        v = analyze_flow(
+            lambda x, m: x * m["used"].astype(jnp.float32), a, modes,
+            path="p", mode_args=(1,))
+        assert v == []
+
+    def test_narrow_bad_widening_impostor(self, mats):
+        a, _ = mats
+        h = a.astype(jnp.bfloat16)
+
+        @jax.jit
+        def quantize_mantissa_impostor(x):
+            return x.astype(jnp.float32)
+
+        v = analyze_flow(lambda x: quantize_mantissa_impostor(x) + 0.0, h,
+                         path="p")
+        assert rule_ids(v) == {"FLOW-NARROW"}
+
+    def test_narrow_good_real_kernel(self, mats):
+        from repro.kernels.quantize_mantissa.ops import quantize_mantissa_op
+        a, _ = mats
+        v = analyze_flow(lambda x: quantize_mantissa_op(x, keep=8), a,
+                         path="p")
+        assert v == []
+
+
+# --------------------------------------------------------------------------
+# dispatch rules
+
+class TestDispatch:
+    def _runtime(self, impl):
+        from repro.core.rmpm import mp_matmul_runtime
+        blk = (16, 16, 16)
+
+        def fn(a, b, m):
+            return mp_matmul_runtime(a, b, m, impl=impl, block=blk,
+                                     allow_auto=False)
+        return fn
+
+    def test_count_good(self, mats):
+        a, b = mats
+        v = audit(self._runtime("tile"), (a, b, jnp.int32(2)),
+                  Expect(exact={"switches": 0, "pallas_calls": 1}), "p")
+        assert v == []
+
+    def test_count_bad(self, mats):
+        a, b = mats
+        # the xla runtime path audited against the tile contract
+        v = audit(self._runtime("xla"), (a, b, jnp.int32(2)),
+                  Expect(exact={"switches": 0, "pallas_calls": 1}), "p")
+        assert rule_ids(v) == {"DISP-COUNT"}
+        assert len(v) == 2  # one per failed counter
+
+    def test_bounds(self, mats):
+        a, b = mats
+        stats = audit_stats(self._runtime("xla"), a, b, jnp.int32(2))
+        assert Expect(at_most={"switches": 1}).check(stats, "p") == []
+        assert rule_ids(Expect(at_least={"pallas_calls": 1}).check(
+            stats, "p")) == {"DISP-COUNT"}
+
+    def test_densify_bad(self):
+        pool = jnp.zeros((64, 4, 8), jnp.float32)
+        idx = jnp.zeros((2, 64), jnp.int32)  # every row gathers the pool
+        v = audit(lambda p, i: p[i], (pool, idx),
+                  Expect(densify_bytes=4 * 4 * 8 * 2 * 8), "p")
+        assert rule_ids(v) == {"DISP-DENSIFY"}
+
+    def test_densify_good(self):
+        pool = jnp.zeros((64, 4, 8), jnp.float32)
+        idx = jnp.zeros((2, 8), jnp.int32)  # 8 pages/row <= the cap
+        v = audit(lambda p, i: p[i], (pool, idx),
+                  Expect(densify_bytes=4 * 4 * 8 * 2 * 8), "p")
+        assert v == []
+
+    def test_tile_policy_reexport_compat(self, mats):
+        # the verify/CI contract: old import path, exactly two keys
+        from repro.kernels.tile_matmul import tile_policy
+        assert tile_policy.dispatch_stats is dispatch_stats
+        a, b = mats
+        s = dispatch_stats(self._runtime("tile"), a, b, jnp.int32(2))
+        assert s == {"switches": 0, "pallas_calls": 1}
+
+
+# --------------------------------------------------------------------------
+# trace-hygiene linter
+
+def _ids(src, path="src/repro/x.py"):
+    return rule_ids(lint_source(textwrap.dedent(src), path))
+
+
+class TestLint:
+    def test_th001_bad_host_branch(self):
+        assert _ids("""
+            import jax
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    return x
+                return -x
+            """) == {"TH001"}
+
+    def test_th001_bad_ifexp_module_level_jit(self):
+        # the engine idiom: jitted by reference, not by decorator
+        assert _ids("""
+            import jax
+            def step(x):
+                return x if x.sum() > 0 else -x
+            compiled = jax.jit(step)
+            """) == {"TH001"}
+
+    def test_th001_bad_self_attr_jit(self):
+        assert _ids("""
+            import jax
+            class Engine:
+                def _masked_step(self, tokens, state):
+                    while tokens > 0:
+                        tokens = tokens - 1
+                    return state
+                def __init__(self):
+                    self._step = jax.jit(self._masked_step)
+            """) == {"TH001"}
+
+    def test_th001_good_metadata_and_static(self):
+        assert _ids("""
+            import jax
+            from functools import partial
+            @partial(jax.jit, static_argnames=("rounding",))
+            def f(x, rounding):
+                if x.ndim < 2:
+                    x = x.reshape(1, -1)
+                if rounding != "rne":
+                    x = x + 1
+                if x is None:
+                    return None
+                y = x if x.ndim == 2 else x[None]
+                return y
+            """) == set()
+
+    def test_th002_bad_wallclock(self):
+        assert _ids("""
+            import time
+            def span():
+                t0 = time.time()
+                return time.time() - t0
+            """) == {"TH002"}
+
+    def test_th002_allowlisted_stamp(self):
+        src = """
+            import time
+            def manifest():
+                return {"time": time.time()}
+            """
+        assert _ids(src, path="src/repro/checkpoint/manager.py") == set()
+        assert _ids(src) == {"TH002"}
+
+    def test_th003_bad_numpy_on_traced(self):
+        assert _ids("""
+            import jax, numpy as np
+            @jax.jit
+            def f(x):
+                return np.sum(x)
+            """) == {"TH003"}
+
+    def test_th003_bad_coercion(self):
+        assert _ids("""
+            import jax
+            @jax.jit
+            def f(x):
+                return float(x)
+            """) == {"TH003"}
+
+    def test_th003_good_numpy_on_metadata(self):
+        assert _ids("""
+            import jax, numpy as np
+            @jax.jit
+            def f(x):
+                n = np.prod(x.shape)
+                return x * n
+            """) == set()
+
+    def test_th004_bad_interpret_in_jit(self):
+        assert _ids("""
+            import jax
+            @jax.jit
+            def f(x):
+                interp = resolve_interpret(None)
+                return kernel(x, interpret=interp)
+            """) == {"TH004"}
+
+    def test_th004_good_shell_resolution(self):
+        assert _ids("""
+            import jax
+            def shell(x, interpret=None):
+                interp = resolve_interpret(interpret)
+                return _jitted(x, interpret=interp)
+            """) == set()
+
+    def test_th005_bad_mutable_default_arg(self):
+        assert _ids("""
+            def f(x, acc=[]):
+                acc.append(x)
+                return acc
+            """) == {"TH005"}
+
+    def test_th005_bad_dataclass_field(self):
+        assert _ids("""
+            import dataclasses
+            @dataclasses.dataclass
+            class Config:
+                xs: list = []
+            """) == {"TH005"}
+
+    def test_th005_good_default_factory(self):
+        assert _ids("""
+            import dataclasses
+            @dataclasses.dataclass
+            class Config:
+                xs: list = dataclasses.field(default_factory=list)
+            def f(x, acc=None):
+                return acc
+            """) == set()
+
+    def test_repo_src_is_clean(self):
+        from repro.analysis import lint_paths
+        from repro.analysis.__main__ import _default_src
+        violations, files = lint_paths(_default_src())
+        assert files, "linter found no files — wrong root?"
+        assert violations == [], [v.format() for v in violations]
+
+
+# --------------------------------------------------------------------------
+# report + CLI
+
+class TestReport:
+    def test_format_and_json(self, tmp_path):
+        v = [Violation("TH002", "a.py:3", "wall clock")]
+        text = format_report(v, ["a.py"])
+        assert "TH002 @ a.py:3" in text and "1 violation" in text
+        out = tmp_path / "r.json"
+        write_json(str(out), v, ["a.py"])
+        doc = json.loads(out.read_text())
+        assert doc["clean"] is False
+        assert doc["violations"][0]["rule"] == "TH002"
+
+    def test_cli_lint_only_bad_tree(self, tmp_path, capsys):
+        bad = tmp_path / "mod.py"
+        bad.write_text("import time\nT0 = time.time()\n")
+        rc = analysis_main(["--skip-paths", "--src", str(tmp_path),
+                            "--report", str(tmp_path / "r.json")])
+        assert rc == 1
+        doc = json.loads((tmp_path / "r.json").read_text())
+        assert [v["rule"] for v in doc["violations"]] == ["TH002"]
+
+    def test_cli_lint_only_clean_tree(self, tmp_path, capsys):
+        (tmp_path / "mod.py").write_text("X = 1\n")
+        assert analysis_main(["--skip-paths", "--src", str(tmp_path)]) == 0
+
+    def test_cli_quick_paths_clean(self, tmp_path):
+        # kernel + train hot paths must satisfy their pinned contracts
+        rc = analysis_main(["--quick", "--skip-lint",
+                            "--report", str(tmp_path / "r.json")])
+        assert rc == 0
+        doc = json.loads((tmp_path / "r.json").read_text())
+        assert doc["clean"] is True
+        assert "pmm-runtime-tile" in doc["checked"]
+        assert "train-step" in doc["checked"]
